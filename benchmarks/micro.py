@@ -1,0 +1,114 @@
+"""Microbenchmarks: kernel wall times (interpret mode on CPU — relative
+numbers only), scheduler/decomposer timings, compression ratios, pipeline
+closed-form vs simulator agreement."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time_call(fn, *args, repeat: int = 3) -> float:
+    fn(*args)                     # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / repeat * 1e6  # us
+
+
+def kernel_bench() -> List[dict]:
+    from repro.kernels import ops
+    rows = []
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 4, 256, 128), jnp.float32)
+    k = jax.random.normal(key, (1, 2, 256, 128), jnp.float32)
+    v = jax.random.normal(key, (1, 2, 256, 128), jnp.float32)
+    us = _time_call(lambda: ops.flash_attention(q, k, v))
+    rows.append({"name": "kernel/flash_attention_256", "us_per_call": us,
+                 "derived": f"gqa4:2,interpret"})
+    x = jax.random.normal(key, (1 << 20,), jnp.float32)
+    us = _time_call(lambda: ops.int8_quantize(x))
+    rows.append({"name": "kernel/int8_quantize_1M", "us_per_call": us,
+                 "derived": f"ratio={(1<<20)*4/((1<<20)+4*4096):.2f}x"})
+    xm = jax.random.normal(key, (1, 128, 256), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(key, (1, 128, 256))) * 0.1
+    b = jax.random.normal(key, (1, 128, 16), jnp.float32)
+    a = -jnp.exp(jax.random.normal(key, (256, 16)))
+    us = _time_call(lambda: ops.mamba_scan(xm, dt, b, b, a, chunk=32,
+                                           di_block=128))
+    rows.append({"name": "kernel/mamba_scan_128x256", "us_per_call": us,
+                 "derived": "interpret"})
+    r = jax.random.normal(key, (1, 64, 2, 32), jnp.float32)
+    w = jax.nn.sigmoid(jax.random.normal(key, (1, 64, 2, 32)))
+    u = jax.random.normal(key, (2, 32)) * 0.1
+    us = _time_call(lambda: ops.rwkv_scan(r, r, r, w, u, chunk=16))
+    rows.append({"name": "kernel/rwkv_scan_64", "us_per_call": us,
+                 "derived": "interpret"})
+    return rows
+
+
+def scheduler_bench() -> List[dict]:
+    from repro.core.dag import build_model_dag
+    from repro.core.decomposer import decompose_contiguous
+    from repro.core.perfmodel import LINK_REGIMES, PerfModel, make_fleet
+    from repro.core.scheduler import schedule_loadbalance, tasks_from_parts
+    from repro.configs import get_config
+
+    cfg = get_config("gpt3-24l")
+    dag = build_model_dag(cfg, batch=32, seq=2048)
+    rows = []
+    t0 = time.perf_counter()
+    parts = decompose_contiguous(dag, 50)
+    t_dec = (time.perf_counter() - t0) * 1e6
+    rows.append({"name": "core/decompose_50", "us_per_call": t_dec,
+                 "derived": f"{len(dag)}ops"})
+    nodes = make_fleet([("rtx3080", 30), ("rtx4090", 10), ("rtx4080", 10)],
+                       LINK_REGIMES["wan_1gbps"])
+    tasks = tasks_from_parts(dag, parts)
+    t0 = time.perf_counter()
+    sched = schedule_loadbalance(tasks, nodes)
+    t_sch = (time.perf_counter() - t0) * 1e6
+    # balance quality: makespan vs lower bound
+    lb = sum(t.flops for t in tasks) / sum(n.speed for n in nodes)
+    rows.append({"name": "core/schedule_lpt_50x50", "us_per_call": t_sch,
+                 "derived": f"makespan/LB={sched.makespan/lb:.3f}"})
+    return rows
+
+
+def compression_bench() -> List[dict]:
+    from repro.core.compression import CompressionSpec
+    n = 10**8   # a 400MB f32 gradient
+    rows = []
+    for spec in [CompressionSpec("none"), CompressionSpec("topk", ratio=0.01),
+                 CompressionSpec("qsgd", levels=256),
+                 CompressionSpec("int8"),
+                 CompressionSpec("local_sgd", period=8)]:
+        by = spec.bytes(n)
+        # time to send over 1 Gbps
+        rows.append({"name": f"compression/{spec.kind}",
+                     "us_per_call": by / (125e6) * 1e6,
+                     "derived": f"{4*n/by:.1f}x_smaller"})
+    return rows
+
+
+def pipeline_bench() -> List[dict]:
+    from repro.core.pipeline import (StageTimes, pipelined_eq4,
+                                     simulate_pipeline)
+    rng = np.random.RandomState(0)
+    errs = []
+    t0 = time.perf_counter()
+    for _ in range(100):
+        n = rng.randint(2, 20)
+        st = StageTimes(list(rng.uniform(0.1, 2, n)),
+                        list(rng.uniform(0, 1, n)))
+        nb = int(rng.randint(1, 256))
+        sim = simulate_pipeline(st, nb)
+        eq4 = pipelined_eq4(st, nb)
+        errs.append(abs(sim - eq4) / eq4)
+    us = (time.perf_counter() - t0) / 100 * 1e6
+    return [{"name": "core/pipeline_eq4_vs_sim", "us_per_call": us,
+             "derived": f"max_rel_err={max(errs):.2e}"}]

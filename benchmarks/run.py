@@ -1,0 +1,56 @@
+"""Benchmark harness — one function per paper table/figure plus system
+microbenchmarks.  Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only substring]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def _emit(rows):
+    for r in rows:
+        name = r.pop("name")
+        us = r.pop("us_per_call", "")
+        derived = r.pop("derived", "")
+        extra = ";".join(f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                         for k, v in r.items())
+        blob = ";".join(x for x in [str(derived), extra] if x)
+        print(f"{name},{us if us == '' else f'{us:.1f}'},{blob}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from benchmarks import figures, micro
+
+    suites = [
+        ("fig4", figures.fig4_partition),
+        ("fig5", figures.fig5_bert),
+        ("fig6", figures.fig6_gpt3),
+        ("table1", figures.table1_cost),
+        ("claims", figures.paper_claims_check),
+        ("kernels", micro.kernel_bench),
+        ("scheduler", micro.scheduler_bench),
+        ("compression", micro.compression_bench),
+        ("pipeline", micro.pipeline_bench),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for tag, fn in suites:
+        if args.only and args.only not in tag:
+            continue
+        try:
+            _emit(fn())
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{tag},ERROR,{type(e).__name__}: {e}", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

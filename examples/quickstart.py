@@ -1,0 +1,48 @@
+"""Quickstart: build a small decoder from the public API, train it on the
+synthetic stream until the loss approaches the analytic optimum, then
+generate from it.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.data.synthetic import SyntheticConfig, SyntheticLM
+from repro.serve.engine import generate
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def main():
+    # any assigned architecture works here; qwen3-8b's reduced variant is a
+    # 2-layer GQA decoder with qk-norm
+    cfg = get_smoke_config("qwen3-8b")
+    cfg = dataclasses.replace(cfg, vocab_size=128)
+
+    loader = SyntheticLM(SyntheticConfig(
+        vocab_size=cfg.vocab_size, seq_len=64, global_batch=8, noise=0.05))
+    print(f"model: {cfg.name}  ({cfg.n_layers}L, d={cfg.d_model})")
+    print(f"optimal loss of the stream ≈ {loader.optimal_loss():.3f}")
+
+    trainer = Trainer(cfg, TrainConfig(steps=80, lr=3e-3, warmup=10,
+                                       log_every=20), loader)
+    trainer.fit()
+
+    prompts = loader.batch(999)["tokens"][:2, :8]
+    out = generate(trainer.params, cfg, prompts, max_new=12)
+    print("prompt     :", prompts[0].tolist())
+    print("generated  :", out[0, 8:].tolist())
+    # the stream is t+1 = hash(t) 95% of the time; check the model learned it
+    from repro.data.synthetic import _hash_next
+    import numpy as np
+    pred = out[0, 8:].tolist()
+    hits = sum(int(pred[i + 1] == _hash_next(np.array(pred[i]),
+                                             cfg.vocab_size))
+               for i in range(len(pred) - 1))
+    print(f"hash-rule hits in generation: {hits}/{len(pred)-1}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Batched serving example: continuous batching with mixed prompt lengths
+and request arrival between ticks, on any assigned architecture
+(including the hybrid/SSM ones, whose decode uses recurrent state).
+
+    PYTHONPATH=src python examples/serve_batched.py --arch rwkv6-7b
+"""
+import argparse
+import time
+
+import jax
+
+from repro.configs import ALL_ARCHS, get_smoke_config
+from repro.models.transformer import init_params
+from repro.serve.engine import Request, ServingEngine, generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ALL_ARCHS), default="rwkv6-7b")
+    ap.add_argument("--slots", type=int, default=3)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    engine = ServingEngine(params, cfg, slots=args.slots, cache_len=96)
+
+    # first wave
+    for i in range(4):
+        engine.submit(Request(i, [1 + i, 2, 3], max_new=6))
+    ticks = 0
+    while engine.tick():
+        ticks += 1
+        if ticks == 3:   # late arrivals join running batch
+            engine.submit(Request(100, [7, 8, 9, 10], max_new=5))
+            engine.submit(Request(101, [7, 8, 9, 10], max_new=5))
+    done = sorted(engine.finished, key=lambda r: r.req_id)
+    print(f"{cfg.name}: {len(done)} requests over {ticks} engine ticks")
+    for r in done:
+        print(f"  req{r.req_id:3d} prompt={r.prompt} -> {r.generated}")
+    # same-prompt requests must decode identically (slot isolation)
+    assert done[-1].generated == done[-2].generated
+    ref = generate(params, cfg,
+                   jax.numpy.asarray([[7, 8, 9, 10]], jax.numpy.int32),
+                   max_new=5)[0, 4:].tolist()
+    assert done[-1].generated == ref, (done[-1].generated, ref)
+    print("late-arrival decode == fresh generate() ✓")
+
+
+if __name__ == "__main__":
+    main()

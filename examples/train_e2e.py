@@ -1,0 +1,70 @@
+"""End-to-end training driver: train a ~100M-parameter decoder for a few
+hundred steps with checkpointing and resume.
+
+    PYTHONPATH=src python examples/train_e2e.py --preset 100m --steps 300
+    PYTHONPATH=src python examples/train_e2e.py --preset 20m  --steps 150
+
+The 100m preset is the deliverable configuration (sized for a real
+accelerator); the 20m preset exercises the identical path in CPU-hours
+budgets.  Loss must approach the stream's analytic optimum.
+"""
+import argparse
+import dataclasses
+
+from repro.configs import get_config
+from repro.data.synthetic import SyntheticConfig, SyntheticLM
+from repro.models.config import ModelConfig
+from repro.train.trainer import TrainConfig, Trainer
+
+PRESETS = {
+    # ~103M params: 12L, d=768, vocab 32k (GPT-2-small-like)
+    "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=12,
+                 head_dim=64, d_ff=3072, vocab_size=32000,
+                 seq=512, batch=8),
+    # ~19M params: CPU-friendly
+    "20m": dict(n_layers=6, d_model=384, n_heads=6, n_kv_heads=6,
+                head_dim=64, d_ff=1536, vocab_size=8192,
+                seq=256, batch=8),
+    # ~3M: smoke
+    "3m": dict(n_layers=4, d_model=192, n_heads=4, n_kv_heads=4,
+               head_dim=48, d_ff=768, vocab_size=2048,
+               seq=128, batch=8),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=list(PRESETS), default="20m")
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_e2e_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    p = PRESETS[args.preset]
+    cfg = ModelConfig(
+        name=f"e2e-{args.preset}", arch_type="dense",
+        n_layers=p["n_layers"], d_model=p["d_model"], n_heads=p["n_heads"],
+        n_kv_heads=p["n_kv_heads"], head_dim=p["head_dim"], d_ff=p["d_ff"],
+        vocab_size=p["vocab_size"])
+    print(f"{cfg.name}: {cfg.param_counts()['total']/1e6:.1f}M params")
+
+    loader = SyntheticLM(SyntheticConfig(
+        vocab_size=cfg.vocab_size, seq_len=p["seq"], global_batch=p["batch"],
+        noise=0.05))
+    print(f"optimal loss ≈ {loader.optimal_loss():.3f}")
+    trainer = Trainer(cfg, TrainConfig(
+        steps=args.steps, lr=args.lr, warmup=max(10, args.steps // 20),
+        log_every=max(1, args.steps // 20), ckpt_every=args.steps // 3,
+        ckpt_dir=args.ckpt_dir), loader)
+    if args.resume:
+        trainer.maybe_restore()
+        print(f"resumed at step {trainer.start_step}")
+    hist = trainer.fit()
+    print(f"final loss {hist[-1]['loss']:.4f} "
+          f"(optimum {loader.optimal_loss():.3f}); "
+          f"checkpoints in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Checkpointing: pytree <-> npz with a JSON manifest, step-numbered
+directories, retention policy, and atomic writes (write to tmp, rename).
+Works for params, optimizer state and data-iterator cursors alike.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _to_numpy(leaf) -> np.ndarray:
+    """bfloat16 has no native numpy dtype npz can store: round-trip
+    through float32 (manifest keeps the original dtype)."""
+    leaf = jnp.asarray(leaf)
+    if leaf.dtype == jnp.bfloat16:
+        return np.asarray(leaf.astype(jnp.float32))
+    return np.asarray(leaf)
+
+
+def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree, *, keep: int = 3) -> str:
+    """Atomically write ``tree`` under ckpt_dir/step_<n>/; prune old."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    leaves = _flatten_with_paths(tree)
+    treedef = jax.tree.structure(tree)
+    arrays = {f"a{i}": _to_numpy(leaf) for i, (_, leaf) in enumerate(leaves)}
+    manifest = {
+        "step": step,
+        "keys": [k for k, _ in leaves],
+        "treedef": str(treedef),
+        "dtypes": [str(jnp.asarray(l).dtype) for _, l in leaves],
+    }
+    tmp = tempfile.mkdtemp(dir=ckpt_dir)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _prune(ckpt_dir, keep)
+    return final
+
+
+def _prune(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d))
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    return int(steps[-1].split("_")[1]) if steps else None
+
+
+def restore(ckpt_dir: str, tree_like, step: Optional[int] = None):
+    """Restore into the structure of ``tree_like`` (shape/dtype checked)."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    assert step is not None, f"no checkpoints under {ckpt_dir}"
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    data = np.load(os.path.join(d, "arrays.npz"))
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    ref_leaves, treedef = jax.tree.flatten(tree_like)
+    arrays = [data[f"a{i}"] for i in range(len(manifest["keys"]))]
+    assert len(arrays) == len(ref_leaves), (
+        f"checkpoint has {len(arrays)} leaves, expected {len(ref_leaves)}")
+    out = []
+    for ref, arr in zip(ref_leaves, arrays):
+        assert tuple(arr.shape) == tuple(jnp.shape(ref)), \
+            f"shape mismatch {arr.shape} vs {jnp.shape(ref)}"
+        out.append(jnp.asarray(arr).astype(jnp.asarray(ref).dtype))
+    return treedef.unflatten(out), step

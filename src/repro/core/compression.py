@@ -1,0 +1,156 @@
+"""Communication-efficiency toolbox (paper §2.3) — the techniques FusionAI
+"incorporates and conducts scheduling with": top-k sparsification (with
+error feedback), QSGD-style stochastic quantization, deterministic int8
+block quantization (backed by the Pallas kernel for the hot path), and
+local-SGD step gating.
+
+Every transform is a pair (encode, decode) plus an analytic
+``compressed_bytes`` used by the scheduler/perf-model to price
+communication on slow links.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Top-k sparsification (+ error feedback)
+# ---------------------------------------------------------------------------
+
+def topk_encode(g: Array, ratio: float) -> Tuple[Array, Array]:
+    """Keep the top ``ratio`` fraction by magnitude. Returns (values, idx)."""
+    flat = g.reshape(-1)
+    k = max(1, int(flat.size * ratio))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx
+
+
+def topk_decode(values: Array, idx: Array, shape) -> Array:
+    flat = jnp.zeros(math.prod(shape), values.dtype).at[idx].set(values)
+    return flat.reshape(shape)
+
+
+def topk_bytes(n_elems: int, ratio: float, value_bytes: int = 4,
+               index_bytes: int = 4) -> float:
+    k = max(1, int(n_elems * ratio))
+    return k * (value_bytes + index_bytes)
+
+
+@dataclass
+class ErrorFeedback:
+    """EF-SGD memory: residual of what compression dropped, re-added next
+    round.  Usage: state = ef.init(g); g_hat, state = ef.step(g, state)."""
+    ratio: float
+
+    def init(self, g: Array) -> Array:
+        return jnp.zeros_like(g)
+
+    def step(self, g: Array, residual: Array) -> Tuple[Array, Array]:
+        corrected = g + residual
+        vals, idx = topk_encode(corrected, self.ratio)
+        sent = topk_decode(vals, idx, corrected.shape)
+        return sent, corrected - sent
+
+
+# ---------------------------------------------------------------------------
+# QSGD stochastic quantization
+# ---------------------------------------------------------------------------
+
+def qsgd_encode(key, g: Array, levels: int = 256) -> Tuple[Array, Array]:
+    """Stochastic uniform quantization to ``levels`` buckets per tensor.
+    Returns (codes uint8/16, scale). Unbiased: E[decode] = g."""
+    scale = jnp.max(jnp.abs(g)) + 1e-12
+    y = jnp.abs(g) / scale * (levels - 1)
+    lo = jnp.floor(y)
+    p = y - lo
+    up = jax.random.bernoulli(key, p, g.shape)
+    q = (lo + up.astype(jnp.float32)).astype(jnp.uint8 if levels <= 256
+                                             else jnp.uint16)
+    sign = jnp.signbit(g)
+    return jnp.where(sign, -q.astype(jnp.int32), q.astype(jnp.int32)), scale
+
+
+def qsgd_decode(codes: Array, scale: Array, levels: int = 256) -> Array:
+    return codes.astype(jnp.float32) * scale / (levels - 1)
+
+
+def qsgd_bytes(n_elems: int, levels: int = 256) -> float:
+    bits = max(1, math.ceil(math.log2(levels))) + 1      # + sign bit
+    return n_elems * bits / 8 + 4                        # + f32 scale
+
+
+# ---------------------------------------------------------------------------
+# Deterministic int8 block quantization (all-reduce payload compression)
+# ---------------------------------------------------------------------------
+
+def int8_block_encode(g: Array, block: int = 256) -> Tuple[Array, Array]:
+    """Per-block absmax int8. Returns (q int8 (n_blocks, block), scales)."""
+    flat = g.reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block).astype(jnp.float32)
+    scales = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scales), -127, 127).astype(jnp.int8)
+    return q, scales
+
+
+def int8_block_decode(q: Array, scales: Array, shape) -> Array:
+    flat = (q.astype(jnp.float32) * scales).reshape(-1)
+    return flat[: math.prod(shape)].reshape(shape)
+
+
+def int8_bytes(n_elems: int, block: int = 256) -> float:
+    n_blocks = math.ceil(n_elems / block)
+    return n_elems + n_blocks * 4
+
+
+# ---------------------------------------------------------------------------
+# Local SGD (§2.3): communicate every H steps
+# ---------------------------------------------------------------------------
+
+@dataclass
+class LocalSGD:
+    """Step gate: sync model average every ``period`` local steps.  The
+    effective per-step communication volume shrinks by 1/period, which is
+    what the scheduler prices."""
+    period: int
+
+    def should_sync(self, step: int) -> bool:
+        return (step + 1) % self.period == 0
+
+    def bytes_per_step(self, model_bytes: float) -> float:
+        return model_bytes / self.period
+
+
+# ---------------------------------------------------------------------------
+# Registry used by the scheduler to price links
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class CompressionSpec:
+    kind: str            # none | topk | qsgd | int8 | local_sgd
+    ratio: float = 0.01  # topk keep-ratio
+    levels: int = 256    # qsgd levels
+    period: int = 8      # local-sgd period
+
+    def bytes(self, n_elems: int, raw_bytes: Optional[float] = None) -> float:
+        raw = raw_bytes if raw_bytes is not None else 4.0 * n_elems
+        if self.kind == "none":
+            return raw
+        if self.kind == "topk":
+            return topk_bytes(n_elems, self.ratio)
+        if self.kind == "qsgd":
+            return qsgd_bytes(n_elems, self.levels)
+        if self.kind == "int8":
+            return int8_bytes(n_elems)
+        if self.kind == "local_sgd":
+            return raw / self.period
+        raise ValueError(self.kind)

@@ -1,0 +1,56 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels execute in interpret mode (the kernel
+body runs as traced JAX ops); on a real TPU set ``interpret=False`` (or
+env REPRO_PALLAS_COMPILE=1) to compile through Mosaic.  Model code calls
+these wrappers, never ``pallas_call`` directly.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import quantize as _q
+from repro.kernels import ssm_scan as _s
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                   "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: float | None = None,
+                    block_q: int = _fa.DEFAULT_BLOCK_Q,
+                    block_k: int = _fa.DEFAULT_BLOCK_K):
+    """q: (B,Hq,S,D); k,v: (B,Hkv,T,D) -> (B,Hq,S,D)."""
+    return _fa.flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                   scale=scale, block_q=block_q,
+                                   block_k=block_k, interpret=_INTERPRET)
+
+
+@partial(jax.jit, static_argnames=("block",))
+def int8_quantize(x, *, block: int = _q.DEFAULT_BLOCK):
+    return _q.int8_quantize(x, block=block, interpret=_INTERPRET)
+
+
+@partial(jax.jit, static_argnames=("shape", "dtype"))
+def int8_dequantize(q, scales, shape, dtype=jnp.float32):
+    return _q.int8_dequantize(q, scales, shape, dtype, interpret=_INTERPRET)
+
+
+@partial(jax.jit, static_argnames=("chunk", "di_block"))
+def mamba_scan(x, dt, b, c, a, *, chunk: int = _s.DEFAULT_CHUNK,
+               di_block: int = _s.DEFAULT_DI_BLOCK):
+    """Selective scan: x,dt (B,S,di); b,c (B,S,ds); a (di,ds)."""
+    return _s.mamba_scan(x, dt, b, c, a, chunk=chunk, di_block=di_block,
+                         interpret=_INTERPRET)
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def rwkv_scan(r, k, v, w, u, *, chunk: int = _s.DEFAULT_CHUNK):
+    """RWKV6 wkv: r,k,v,w (B,S,H,hd); u (H,hd)."""
+    return _s.rwkv_scan(r, k, v, w, u, chunk=chunk, interpret=_INTERPRET)

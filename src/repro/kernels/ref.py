@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for every Pallas kernel — independent, direct
+implementations used by the allclose test sweeps and as the CPU fallback.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0,
+                  scale: float | None = None) -> jax.Array:
+    """q: (B,Hq,S,D); k,v: (B,Hkv,T,D). Dense materialized softmax."""
+    B, Hq, S, D = q.shape
+    _, Hkv, T, _ = k.shape
+    G = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    k = jnp.repeat(k, G, axis=1)
+    v = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return jnp.einsum("bhst,bhtd->bhsd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def int8_quantize_ref(x: jax.Array, block: int = 256):
+    flat = x.reshape(-1)
+    pad = -flat.size % block
+    flat = jnp.pad(flat, (0, pad))
+    rows = flat.reshape(-1, block).astype(jnp.float32)
+    scale = jnp.max(jnp.abs(rows), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(rows / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize_ref(q: jax.Array, scales: jax.Array, shape,
+                        dtype=jnp.float32):
+    flat = (q.astype(jnp.float32) * scales).reshape(-1)
+    return flat[: math.prod(shape)].reshape(shape).astype(dtype)
+
+
+def mamba_scan_ref(x, dt, b, c, a):
+    """Direct sequential reference: x,dt (B,S,di); b,c (B,S,ds); a (di,ds)."""
+    B, S, di = x.shape
+    ds = b.shape[-1]
+    a = a.astype(jnp.float32)
+
+    def step(h, xs):
+        x_t, dt_t, b_t, c_t = [t.astype(jnp.float32) for t in xs]
+        dA = jnp.exp(dt_t[..., None] * a)
+        h = dA * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    tm = lambda t: jnp.moveaxis(t, 1, 0)
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (tm(x), tm(dt), tm(b), tm(c)))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+
+
+def rwkv_scan_ref(r, k, v, w, u):
+    """Direct sequential reference: r,k,v,w (B,S,H,hd); u (H,hd)."""
+    B, S, H, hd = r.shape
+
+    def step(Sst, xs):
+        r_t, k_t, v_t, w_t = [t.astype(jnp.float32) for t in xs]
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        o = jnp.einsum("bhi,bhij->bhj", r_t, Sst + u[None, :, :, None] * kv)
+        return w_t[..., :, None] * Sst + kv, o
+
+    tm = lambda t: jnp.moveaxis(t, 1, 0)
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    _, os = jax.lax.scan(step, S0, (tm(r), tm(k), tm(v), tm(w)))
+    return jnp.moveaxis(os, 0, 1).astype(r.dtype)

@@ -1,0 +1,228 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture × input shape × mesh):
+    jit(step, in_shardings, out_shardings).lower(**ShapeDtypeStructs)
+    .compile()  -> memory_analysis() + cost_analysis() + roofline terms.
+
+No arrays are allocated; XLA compiles the full SPMD program for the
+production mesh (16×16 single pod / 2×16×16 multi-pod) on 512 host
+placeholder devices.  Any sharding mismatch, compile-time OOM or
+unsupported collective is a bug in the system and fails here.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+
+from repro.configs import (ASSIGNED_ARCHS, INPUT_SHAPES, baseline_pairs,
+                           get_config, shape_applicable)
+from repro.core.workload import (analytic_hbm_bytes, model_flops,
+                                 model_flops_6nd, step_flops)
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shardings import (batch_specs, cache_specs,
+                                    default_hint_rule, opt_specs,
+                                    param_specs, to_shardings)
+from repro.launch.specs import input_specs
+from repro.models.hints import wrap_with_hints
+from repro.optim.adamw import adamw
+from repro.serve.engine import make_decode_step, make_prefill_step
+from repro.train.step import make_train_step
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def build_jitted(arch: str, shape_name: str, mesh, *, microbatches: int = 1,
+                 kv_chunk: int = 1024):
+    """Returns (jitted_fn, ordered_args_sds)."""
+    spec = input_specs(arch, shape_name)
+    cfg, shape = spec["cfg"], spec["shape"]
+    p_specs = param_specs(spec["params"], mesh)
+    p_sh = to_shardings(p_specs, mesh, spec["params"])
+
+    decode_tp = (shape.kind == "decode"
+                 and os.environ.get("REPRO_DECODE_TP", "1") == "1")
+    hint_rule = default_hint_rule(mesh, batch_size=shape.global_batch,
+                                  decode_tp=decode_tp)
+    from repro.launch.mesh import data_axes
+    n_data = 1
+    for a in data_axes(mesh):
+        n_data *= mesh.shape[a]
+    moe_groups = n_data if shape.global_batch % n_data == 0 else 1
+    if shape.kind == "train":
+        optimizer = adamw(1e-4,
+                          state_bits=int(os.environ.get("REPRO_OPT_BITS",
+                                                        "32")))
+        remat_policy = os.environ.get("REPRO_REMAT_POLICY", "full")
+        step = wrap_with_hints(
+            make_train_step(cfg, optimizer, microbatches=microbatches,
+                            remat=True, remat_policy=remat_policy),
+            mesh, hint_rule,
+            moe_groups=moe_groups,
+            moe_ep=os.environ.get("REPRO_MOE_EP", "1") == "1")
+        o_sh = to_shardings(opt_specs(spec["opt_state"], p_specs, mesh),
+                            mesh, spec["opt_state"])
+        b_sh = to_shardings(batch_specs(spec["batch"], mesh), mesh,
+                            spec["batch"])
+        jitted = jax.jit(step,
+                         in_shardings=(p_sh, o_sh, b_sh),
+                         out_shardings=(p_sh, o_sh, None))
+        args = (spec["params"], spec["opt_state"], spec["batch"])
+    else:
+        B = shape.global_batch
+        c_sh = to_shardings(cache_specs(spec["caches"], mesh, batch_size=B),
+                            mesh, spec["caches"])
+        # decode: replicate token activations across data (weight-stationary
+        # 2D TP via the "residual" hint); caches stay batch-sharded
+        shard_b = B > 1 and not decode_tp
+        b_sh = to_shardings(batch_specs(spec["batch"], mesh,
+                                        shard_batch=shard_b), mesh,
+                            spec["batch"])
+        pos_sh = to_shardings(batch_specs({"p": spec["positions"]}, mesh,
+                                          shard_batch=shard_b), mesh)["p"]
+        fn = (make_prefill_step(cfg, kv_chunk=kv_chunk) if shape.kind == "prefill"
+              else make_decode_step(cfg, kv_chunk=kv_chunk))
+        fn = wrap_with_hints(fn, mesh, hint_rule,
+                             moe_groups=1 if decode_tp else moe_groups,
+                             moe_ep=(not decode_tp and os.environ.get(
+                                 "REPRO_MOE_EP", "1") == "1"))
+        jitted = jax.jit(fn,
+                         in_shardings=(p_sh, c_sh, b_sh, pos_sh),
+                         out_shardings=(None, c_sh))
+        args = (spec["params"], spec["caches"], spec["batch"],
+                spec["positions"])
+    return jitted, args, cfg, shape
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            out_dir: Optional[str] = None, verbose: bool = True,
+            microbatches: int = 1, kv_chunk: int = 1024) -> Dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    chips = mesh.devices.size
+    t0 = time.time()
+    rec: Dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "chips": chips, "status": "ok"}
+    try:
+        jitted, args, cfg, shape = build_jitted(
+            arch, shape_name, mesh, microbatches=microbatches,
+            kv_chunk=kv_chunk)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        print_mem = {
+            k: getattr(mem, k, None) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "alias_size_in_bytes",
+             "generated_code_size_in_bytes")}
+        if verbose:
+            print(f"[{arch} × {shape_name} × {mesh_name}] "
+                  f"lower {t_lower:.1f}s compile {t_compile:.1f}s")
+            print("  memory_analysis:", print_mem)
+            print("  cost_analysis: flops=%.3e bytes=%.3e" % (
+                cost.get("flops", 0.0), cost.get("bytes accessed", 0.0)))
+
+        # MODEL_FLOPS (useful compute) for the roofline ratio
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "decode":
+            kw = dict(batch=B, seq=1, kind="decode", kv_cache_len=S)
+        else:
+            kw = dict(batch=B, seq=S, kind=shape.kind)
+        mflops = model_flops(cfg, **kw)
+        eflops = step_flops(
+            cfg, batch=kw["batch"], seq=kw["seq"], kind=shape.kind,
+            kv_cache_len=kw.get("kv_cache_len", 0),
+            remat_policy=os.environ.get("REPRO_REMAT_POLICY", "full"))
+        hbm = analytic_hbm_bytes(cfg, **kw)
+
+        hlo = compiled.as_text()
+        io = rl.entry_io_bytes(hlo)
+        per_chip_peak = io["args"]
+        roof = rl.analyze(arch=arch, shape=shape_name, mesh_name=mesh_name,
+                          chips=chips, cost=cost, hlo_text=hlo,
+                          exec_flops=eflops, hbm_bytes=hbm,
+                          model_flops=mflops,
+                          per_chip_peak_mem=per_chip_peak)
+        rec.update({
+            "lower_s": t_lower, "compile_s": t_compile,
+            "per_chip_arg_bytes": io["args"],
+            "per_chip_out_bytes": io["outputs"],
+            "memory_analysis": {k: (int(v) if v is not None else None)
+                                for k, v in print_mem.items()},
+            "cost_flops_per_device": cost.get("flops", 0.0),
+            "cost_bytes_per_device": cost.get("bytes accessed", 0.0),
+            "model_flops_analytic": mflops,
+            "model_flops_6nd": model_flops_6nd(
+                get_config(arch),
+                tokens=B * (S if shape.kind != "decode" else 1)),
+            "roofline": roof.to_dict(),
+        })
+        if verbose:
+            print(f"  per-chip args {io['args']/1e9:.2f}GB "
+                  f"out {io['outputs']/1e9:.2f}GB")
+            print(f"  roofline: compute {roof.compute_s*1e3:.2f}ms | "
+                  f"memory {roof.memory_s*1e3:.2f}ms | "
+                  f"collective {roof.collective_s*1e3:.2f}ms "
+                  f"-> bottleneck={roof.bottleneck} "
+                  f"useful={roof.useful_ratio:.2f}")
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[{arch} × {shape_name} × {mesh_name}] FAILED: "
+                  f"{rec['error']}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir, f"{arch}_{shape_name}_{mesh_name}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1, default=float)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ASSIGNED_ARCHS) + ["bert-large",
+                                                              "gpt3-24l"])
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every applicable (arch × shape) pair")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    if args.all:
+        pairs, skips = baseline_pairs()
+        for arch, shape in pairs:
+            run_one(arch, shape, multi_pod=args.multi_pod, out_dir=args.out,
+                    microbatches=args.microbatches)
+        for arch, shape, why in skips:
+            print(f"[skip] {arch} × {shape}: {why}")
+        return
+    assert args.arch and args.shape, "--arch/--shape or --all"
+    cfg = get_config(args.arch)
+    ok, why = shape_applicable(cfg, INPUT_SHAPES[args.shape])
+    if not ok:
+        print(f"[skip] {args.arch} × {args.shape}: {why}")
+        return
+    run_one(args.arch, args.shape, multi_pod=args.multi_pod,
+            out_dir=args.out, microbatches=args.microbatches)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,213 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+    compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = collective_bytes / (chips × link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``; collective
+bytes are parsed out of the (post-SPMD, per-device) HLO text by summing
+operand sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops, scaled back to global by ×chips.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, asdict
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one HLO op line: "%name = TYPE[SHAPE]{layout} opcode(..."  (also tuples)
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[-a-z]*\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+_ENTRY_RE = re.compile(r"^ENTRY [^(]*\(([^)]*)\)\s*->\s*(\([^)]*\)|[^ {]+)",
+                       re.MULTILINE)
+
+
+def entry_io_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device argument/output bytes from the post-SPMD ENTRY signature
+    (memory_analysis aggregates host-wide, so compute the honest per-chip
+    numbers here)."""
+    m = _ENTRY_RE.search(hlo_text)
+    if not m:
+        return {"args": 0.0, "outputs": 0.0}
+    return {"args": _shape_bytes(m.group(1)),
+            "outputs": _shape_bytes(m.group(2))}
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-collective-kind byte totals (per-device program), static count
+    (every op once, regardless of loop trip counts)."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        out[m.group(2)] += _shape_bytes(m.group(1))
+    out["total"] = sum(out.values())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Loop-aware collective accounting.
+#
+# XLA's module-level cost/byte counters count a while-loop body ONCE, but a
+# scanned 126-layer stack executes its body 126 times.  We rebuild the
+# computation call graph from the HLO text, parse each while loop's trip
+# count from its condition (compare against a constant), and multiply
+# collective bytes by the product of enclosing trip counts.
+# ---------------------------------------------------------------------------
+
+_COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+)[^\n]*\{", re.MULTILINE)
+_CALL_RE = re.compile(r"(?:calls|to_apply|condition|body)=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_WHILE_RE = re.compile(r"while\([^)]*\),\s*condition=%?([\w\.\-]+),\s*"
+                       r"body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, str]:
+    """computation name -> body text (brace-balanced top-level blocks)."""
+    comps: Dict[str, str] = {}
+    for m in _COMP_RE.finditer(hlo_text):
+        start = m.end()
+        depth = 1
+        i = start
+        while depth and i < len(hlo_text):
+            c = hlo_text[i]
+            if c == "{":
+                depth += 1
+            elif c == "}":
+                depth -= 1
+            i += 1
+        comps[m.group(1)] = hlo_text[m.start():i]
+    return comps
+
+
+def loop_aware_collectives(hlo_text: str) -> Dict[str, float]:
+    """Collective bytes with while-loop trip-count multipliers applied.
+    Returns per-kind totals (per-device)."""
+    comps = _split_computations(hlo_text)
+    entry = None
+    for name in comps:
+        if "ENTRY" in comps[name][:80] or hlo_text.find(f"ENTRY %{name}") >= 0:
+            entry = name
+    if entry is None:                       # fall back: last computation
+        entry = list(comps)[-1] if comps else None
+    if entry is None:
+        return collective_bytes(hlo_text)
+
+    trip_counts: Dict[str, float] = {}       # body comp -> trips
+    for m in _WHILE_RE.finditer(hlo_text):
+        cond, body = m.group(1), m.group(2)
+        consts = [int(c) for c in _CONST_RE.findall(comps.get(cond, ""))]
+        trip_counts[body] = float(max(consts)) if consts else 1.0
+
+    totals = {k: 0.0 for k in _COLLECTIVES}
+    seen_stack = []
+
+    def visit(name: str, mult: float):
+        if name not in comps or name in seen_stack or len(seen_stack) > 64:
+            return
+        seen_stack.append(name)
+        body = comps[name]
+        for m in _OP_RE.finditer(body):
+            totals[m.group(2)] += _shape_bytes(m.group(1)) * mult
+        callees = [m.group(1) for m in _CALL_RE.finditer(body)]
+        for bm in _BRANCH_RE.finditer(body):
+            callees += re.split(r",\s*%?", bm.group(1))
+        for callee in callees:
+            callee = callee.strip().lstrip("%")
+            if callee and callee != name:
+                visit(callee, mult * trip_counts.get(callee, 1.0))
+        seen_stack.pop()
+
+    visit(entry, 1.0)
+    totals["total"] = sum(totals.values())
+    return totals
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    exec_flops: float            # global, analytic (incl. remat)
+    hbm_bytes: float             # global, analytic traffic model
+    coll_bytes: float            # global, loop-aware from compiled HLO
+    model_flops: float           # useful compute (no remat/overcompute)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    useful_ratio: float          # model_flops / exec_flops
+    per_chip_peak_mem: float = 0.0
+    coll_detail: Optional[dict] = None
+    raw_cost_flops: float = 0.0  # XLA static counter (loop bodies once)
+    raw_cost_bytes: float = 0.0
+    raw_coll_bytes_static: float = 0.0
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def analyze(*, arch: str, shape: str, mesh_name: str, chips: int,
+            cost: dict, hlo_text: str, exec_flops: float, hbm_bytes: float,
+            model_flops: float, per_chip_peak_mem: float = 0.0) -> Roofline:
+    """exec_flops / hbm_bytes: analytic global workload (the PALEO-style
+    §3.7 model — XLA's module counters count while bodies once, so the
+    compiled artifact supplies structure + collectives, the workload model
+    supplies magnitudes).  Collectives: loop-aware parse of the compiled
+    per-device HLO, scaled ×chips to global."""
+    coll = loop_aware_collectives(hlo_text)
+    coll_static = collective_bytes(hlo_text)
+    coll_total = coll["total"] * chips
+    compute_s = exec_flops / (chips * PEAK_FLOPS)
+    memory_s = hbm_bytes / (chips * HBM_BW)
+    collective_s = coll["total"] / ICI_BW          # per-chip bytes / link bw
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        exec_flops=exec_flops, hbm_bytes=hbm_bytes, coll_bytes=coll_total,
+        model_flops=model_flops,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=max(terms, key=terms.get),
+        useful_ratio=model_flops / exec_flops if exec_flops else 0.0,
+        per_chip_peak_mem=per_chip_peak_mem,
+        coll_detail={k: v * chips for k, v in coll.items()},
+        raw_cost_flops=float(cost.get("flops", 0.0)),
+        raw_cost_bytes=float(cost.get("bytes accessed", 0.0)),
+        raw_coll_bytes_static=coll_static["total"],
+    )

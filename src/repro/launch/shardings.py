@@ -1,0 +1,275 @@
+"""GSPMD sharding rules for every parameter / optimizer / batch / cache
+leaf in the system (DESIGN.md §5).
+
+Scheme: 2D — FSDP-style sharding of the contraction dim on ``data``,
+tensor parallelism of head/ffn/expert dims on ``model``; batch on
+(pod, data); MoE experts on ``model`` (expert parallelism); decode caches
+shard kv-heads (or MLA latent / SSM state) on ``model`` and batch on
+``data``, except long-context batch=1 where the *sequence* dim of caches
+shards on ``data``.
+
+Rules are keyed on leaf path names; every leaf gets an explicit rule
+(unknown names raise, so new params can't silently replicate).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# --- name-keyed rules: value = spec WITHOUT the stack period axis ---------
+# dp = data axes tuple (e.g. ("data",)); mp = "model"
+
+def _param_rules(dp, mp):
+    dps = dp if len(dp) > 1 else dp[0] if dp else None
+    return {
+        # norms / small vectors: replicated
+        "norm1": P(), "norm2": P(), "final_norm": P(), "norm": P(),
+        "q_norm": P(), "k_norm": P(), "kv_norm": P(), "ln_x": P(),
+        "norm_h": P(), "norm_e": P(),
+        "mu": P(None, None), "conv_b": P(), "dt_bias": P(), "D": P(),
+        "w0": P(mp), "u": P(mp, None),
+        # embeddings / head
+        # vocab on model, d replicated: keeps the CE-loss contraction local
+        # (d-on-data head sharding partial-sums (tokens, V/16) f32 logits)
+        "embed": P(mp, None), "lm_head": P(None, mp), "ext_proj": P(None, mp),
+        # attention
+        "wq": P(dps, mp), "wk": P(dps, mp), "wv": P(dps, mp),
+        "wo": P(mp, dps),
+        "bq": P(mp), "bk": P(mp), "bv": P(mp),
+        # MLA
+        "wq_a": P(dps, None), "wq_b": P(None, mp),
+        "wkv_a": P(dps, None), "wk_b": P(None, mp), "wv_b": P(None, mp),
+        # dense ffn (2D) / moe experts (3D) share names; see _spec_for
+        "w_gate": P(dps, mp), "w_up": P(dps, mp), "w_down": P(mp, dps),
+        "router": P(dps, None),
+        # mamba
+        "in_proj": P(dps, mp), "conv_w": P(None, mp),
+        "x_proj": P(mp, None), "dt_proj": P(None, mp),
+        "A_log": P(mp, None),
+        "out_proj": P(mp, dps),
+        # rwkv
+        "wr": P(dps, mp), "wg": P(dps, mp),
+        "wA": P(dps, None), "wB": P(None, mp),
+        # mtp projector
+        "proj": P(dps, None),
+    }
+
+
+def _moe_rules(dp, mp):
+    dps = dp if len(dp) > 1 else dp[0] if dp else None
+    return {
+        "w_gate": P(mp, dps, None), "w_up": P(mp, dps, None),
+        "w_down": P(mp, None, dps),
+    }
+
+
+def _path_names(path) -> list:
+    return [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+
+
+def param_specs(params, mesh) -> dict:
+    """Pytree of PartitionSpec matching ``params`` (shapes from SDS or
+    arrays)."""
+    from repro.launch.mesh import data_axes, model_axis
+    dp, mp = data_axes(mesh), model_axis(mesh)
+    rules = _param_rules(dp, mp)
+    moe_rules = _moe_rules(dp, mp)
+
+    def spec_for(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        in_stack = "stack" in names
+        ndim = len(leaf.shape)
+        if name in moe_rules and ndim - (1 if in_stack else 0) == 3:
+            spec = moe_rules[name]
+        elif name in rules:
+            spec = rules[name]
+        else:
+            raise KeyError(f"no sharding rule for param {'/'.join(names)} "
+                           f"shape={leaf.shape}")
+        base = len(spec)
+        want = ndim - (1 if in_stack else 0)
+        if base < want:                       # e.g. P() for any-rank norms
+            spec = P(*(tuple(spec) + (None,) * (want - base)))
+        if in_stack:
+            spec = P(*((None,) + tuple(spec)))
+        return spec
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def opt_specs(opt_state, p_specs, mesh) -> dict:
+    """Optimizer state: moments/master shard like params; counters
+    replicate."""
+    def build(st):
+        out = {}
+        for k, v in st.items():
+            if k in ("mu", "nu", "master", "vel"):
+                out[k] = p_specs
+            else:
+                out[k] = P()
+        return out
+    return build(opt_state)
+
+
+def batch_specs(batch, mesh, *, shard_batch: bool = True) -> dict:
+    from repro.launch.mesh import data_axes
+    dp = data_axes(mesh)
+    dps = dp if len(dp) > 1 else dp[0]
+
+    def spec_for(path, leaf):
+        b = dps if shard_batch else None
+        return P(*((b,) + (None,) * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch)
+
+
+def cache_leaf_spec(name: str, *, long_ctx: bool, dp, mp,
+                    shape=None, mp_size: int = 0) -> P:
+    """Per-leaf cache sharding (shape WITHOUT the stack period axis).
+
+    KV caches prefer sharding kv-heads on ``model``; when the head count
+    doesn\'t divide the axis (e.g. 8 heads on 16 ranks) they shard head_dim
+    instead — otherwise GSPMD re-shards internally and pays a full-cache
+    gather at every pinned cache update."""
+    dps = dp if len(dp) > 1 else dp[0]
+    bspec = None if long_ctx else dps
+    seq = dps if long_ctx else None
+    kv_spec = P(bspec, seq, mp, None)
+    if shape is not None and mp_size and len(shape) == 4:
+        if shape[2] % mp_size != 0 and shape[3] % mp_size == 0:
+            kv_spec = P(bspec, seq, None, mp)
+    table = {
+        "k": kv_spec,                          # (B, T, Hkv, hd)
+        "v": kv_spec,
+        "pos": P(bspec, seq),                  # (B, T)
+        "ckv": P(bspec, seq, mp),              # (B, T, kr)
+        "krope": P(bspec, seq, mp),            # (B, T, dr)
+        "h": P(bspec, mp, None),               # mamba (B, di, ds)
+        "conv": P(bspec, None, mp),            # (B, K-1, di)
+        "state": P(bspec, mp, None, None),     # rwkv (B, H, hd, hd)
+        "shift": P(bspec, None),               # (B, d)
+    }
+    if name not in table:
+        raise KeyError(f"no cache rule for {name}")
+    return table[name]
+
+
+def cache_specs(caches, mesh, *, batch_size: int) -> dict:
+    """Decode caches.  Normal: batch on data, heads/state on model.
+    batch=1 long-context: sequence dim on data instead."""
+    from repro.launch.mesh import data_axes, model_axis
+    dp, mp = data_axes(mesh), model_axis(mesh)
+    long_ctx = batch_size == 1
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def spec_for(path, leaf):
+        names = _path_names(path)
+        in_stack = "stack" in names
+        shape = leaf.shape[1:] if in_stack else leaf.shape
+        spec = cache_leaf_spec(names[-1], long_ctx=long_ctx, dp=dp, mp=mp,
+                               shape=shape, mp_size=sizes[mp])
+        assert len(spec) == len(shape), (names, leaf.shape, spec)
+        if in_stack:
+            spec = P(*((None,) + tuple(spec)))
+        return spec
+
+    return jax.tree_util.tree_map_with_path(spec_for, caches)
+
+
+def default_hint_rule(mesh, *, batch_size: int, decode_tp: bool = False):
+    """Hint rule for ``repro.models.hints``: pins cache-update outputs to
+    the boundary cache sharding (kills GSPMD reshard round-trips) and
+    places MoE dispatch buffers expert-parallel.
+
+    ``decode_tp``: single-token decode steps shard the residual stream's
+    hidden dim over the data axes (weight-stationary 2D TP) — otherwise
+    GSPMD all-gathers every FSDP-sharded weight per decoded token (§Perf
+    hillclimb C)."""
+    from repro.launch.mesh import data_axes, model_axis
+    dp, mp = data_axes(mesh), model_axis(mesh)
+    dps = dp if len(dp) > 1 else dp[0]
+    long_ctx = batch_size == 1
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def rule(kind: str, shape) -> Optional[P]:
+        if kind.startswith("cache/"):
+            return cache_leaf_spec(kind.split("/", 1)[1],
+                                   long_ctx=long_ctx, dp=dp, mp=mp,
+                                   shape=shape, mp_size=sizes[mp])
+        if kind == "moe_buffer":               # (G, E, C, d)
+            if decode_tp:
+                # align buffer's d with the expert weights' FSDP axis so
+                # the expert einsum partial-sums activations instead of
+                # all-gathering 100s-of-MB weights per decoded token
+                return P(None, mp, None, dps)
+            return P(dps, mp, None, None)
+        if kind == "moe_h":                    # (G, E, C, d)
+            return None if decode_tp else P(dps, mp, None, None)
+        if kind in ("moe_buffer_local", "moe_h_local"):
+            return None if decode_tp else P(dps, None, None, None)
+        if kind == "moe_tokens":               # (T, d)
+            return None if decode_tp else P(dps, None)
+        if kind == "ffn_hidden":               # (B, S, d_ff)
+            # train/prefill: batch on data + hidden on model (Megatron).
+            # Without the pin GSPMD replicates the batch and partial-sums
+            # (B,S,d_ff) f32 activations over data — 100x the traffic of
+            # the FSDP weight gathers this layout implies.
+            return None if decode_tp else P(dps, None, mp)
+        if kind == "residual":                 # (B, S, d)
+            if decode_tp:
+                return P(None, None, dps)
+            return P(dps, None, None)
+        if kind == "attn_q":                   # (B, S, Hq, hd)
+            if decode_tp:                      # align with hd-sharded caches
+                return P(None, None, None, mp)
+            if len(shape) == 4 and shape[2] % sizes[mp] != 0:
+                return None                    # MHA with 24/40 heads: a pin
+                # sanitized to replicated-heads forces full-cache gathers
+            return P(dps, None, mp, None)
+        return None
+
+    return rule
+
+
+def sanitize_spec(spec: P, shape, mesh) -> P:
+    """Drop mesh axes from dims they don't divide (e.g. 24 kv-heads on a
+    16-way model axis -> replicate that dim).  Rank-pad with None."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        n = 1
+        for a in axes:
+            n *= sizes[a]
+        out.append(entry if dim % n == 0 else None)
+    return P(*out)
+
+
+def to_shardings(specs, mesh, tree=None):
+    """PartitionSpec pytree -> NamedSharding pytree; if ``tree`` (arrays or
+    SDS) is given, specs are sanitized against its shapes.  ``specs`` may
+    be a PREFIX of ``tree`` (e.g. one spec covering the {q, s} pair of an
+    int8-quantized optimizer moment): the spec broadcasts over the
+    subtree, sanitized per leaf."""
+    is_spec = lambda x: isinstance(x, P)
+    if tree is None:
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                            is_leaf=is_spec)
+
+    def per(spec, sub):
+        return jax.tree.map(
+            lambda t: NamedSharding(mesh, sanitize_spec(spec, t.shape, mesh)),
+            sub)
+
+    return jax.tree.map(per, specs, tree, is_leaf=is_spec)

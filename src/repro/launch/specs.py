@@ -1,0 +1,79 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run lowers
+against these (weak-type-correct, shardable, zero allocation).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import INPUT_SHAPES, InputShape, get_config
+from repro.models.config import ModelConfig
+from repro.models.transformer import init_cache, init_params
+from repro.optim.adamw import adamw
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_sds(cfg: ModelConfig, batch: int, seq: int, *, kind: str) -> Dict:
+    """Training/prefill batches carry (B, S); decode carries (B, 1).
+    VLM/audio backbones receive stub frontend embeddings for the prompt
+    (prefill/train) and token ids during decode."""
+    if kind == "decode":
+        return {"tokens": SDS((batch, 1), jnp.int32)}
+    out: Dict = {}
+    if cfg.ext_embed_dim:
+        out["embeds"] = SDS((batch, seq, cfg.ext_embed_dim), jnp.float32)
+    else:
+        out["tokens"] = SDS((batch, seq), jnp.int32)
+    if kind == "train":
+        out["labels"] = SDS((batch, seq), jnp.int32)
+    return out
+
+
+def params_sds(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: init_params(k, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def opt_state_sds(cfg: ModelConfig, optimizer=None):
+    import os
+    bits = int(os.environ.get("REPRO_OPT_BITS", "32"))
+    opt = optimizer or adamw(1e-4, state_bits=bits)
+    p = params_sds(cfg)
+    return jax.eval_shape(opt.init, p)
+
+
+def caches_sds(cfg: ModelConfig, batch: int, cache_len: int):
+    return jax.eval_shape(
+        lambda: init_cache(cfg, batch, cache_len))
+
+
+def positions_sds(batch: int, seq: int):
+    return SDS((batch, seq), jnp.int32)
+
+
+def input_specs(arch: str, shape_name: str) -> Dict:
+    """All dry-run inputs for one (architecture, input-shape) pair.
+
+    train  -> {params, opt_state, batch}
+    prefill-> {params, caches, batch, positions}
+    decode -> {params, caches, batch, positions}  (batch = one token)
+    """
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    B, S = shape.global_batch, shape.seq_len
+    out = {"cfg": cfg, "shape": shape, "params": params_sds(cfg)}
+    if shape.kind == "train":
+        out["opt_state"] = opt_state_sds(cfg)
+        out["batch"] = batch_sds(cfg, B, S, kind="train")
+    elif shape.kind == "prefill":
+        out["caches"] = caches_sds(cfg, B, S)
+        out["batch"] = batch_sds(cfg, B, S, kind="prefill")
+        out["positions"] = positions_sds(B, S)
+    else:  # decode: one new token against a seq_len cache
+        out["caches"] = caches_sds(cfg, B, S)
+        out["batch"] = batch_sds(cfg, B, 1, kind="decode")
+        out["positions"] = positions_sds(B, 1)
+    return out

@@ -1,0 +1,72 @@
+"""Sharding hints: a trace-time context that lets deep model internals
+(`ring_write`, MoE dispatch) pin intermediate shardings with
+``with_sharding_constraint`` without threading mesh plumbing through every
+call.  No context -> every hint is a no-op (single-device smoke tests are
+untouched).
+
+The launch layer activates hints around tracing (see ``use_hints``); the
+rules mirror ``repro.launch.shardings`` and are also the main hillclimb
+lever (§Perf).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Callable, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_sharding_hints", default=None)
+
+
+class HintContext:
+    def __init__(self, mesh, rule: Callable[[str, tuple], Optional[P]],
+                 extras: Optional[dict] = None):
+        self.mesh = mesh
+        self.rule = rule
+        self.extras = extras or {}
+
+
+@contextlib.contextmanager
+def use_hints(mesh, rule, **extras):
+    """rule(kind: str, shape: tuple) -> PartitionSpec | None.
+    extras: scalar knobs model code may read (e.g. moe_groups)."""
+    tok = _CTX.set(HintContext(mesh, rule, extras))
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def get_extra(key: str, default=None):
+    ctx = _CTX.get()
+    return default if ctx is None else ctx.extras.get(key, default)
+
+
+def get_mesh():
+    ctx = _CTX.get()
+    return None if ctx is None else ctx.mesh
+
+
+def constrain(x, kind: str):
+    """Apply the active hint rule to ``x`` (no-op without a context)."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    spec = ctx.rule(kind, x.shape)
+    if spec is None:
+        return x
+    from repro.launch.shardings import sanitize_spec
+    spec = sanitize_spec(spec, x.shape, ctx.mesh)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))
+
+
+def wrap_with_hints(fn, mesh, rule, **extras):
+    """Return fn wrapped so hints are active while it traces/executes."""
+    def wrapped(*a, **kw):
+        with use_hints(mesh, rule, **extras):
+            return fn(*a, **kw)
+    return wrapped

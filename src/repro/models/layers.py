@@ -1,0 +1,443 @@
+"""Core neural-net layers in raw JAX.
+
+Everything is a pure function over parameter pytrees (nested dicts of
+``jnp.ndarray``).  Initializers return the pytree; forward functions take
+``(params, inputs, ...)``.  No framework (flax/haiku) is used.
+
+The attention implementation is *blocked* (online-softmax over KV chunks,
+flash-attention style) so peak activation memory stays O(S * chunk) even
+at 32k/500k contexts — this pure-jnp version is also the oracle for the
+Pallas flash-attention kernel in ``repro.kernels``.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.hints import constrain
+
+Array = jax.Array
+
+NEG_INF = -1e30  # finite "minus infinity" keeps online softmax NaN-free
+
+
+def row_dot(x: Array, w: Array) -> Array:
+    """Row-parallel matmul (contraction dim sharded): pin the output dtype
+    so GSPMD's partial-sum all-reduce travels in x.dtype (bf16), not the
+    f32 accumulator."""
+    return jax.lax.dot_general(x, w.astype(x.dtype),
+                               (((x.ndim - 1,), (0,)), ((), ())),
+                               preferred_element_type=x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, *, scale: float = 1.0,
+               dtype=jnp.bfloat16) -> Array:
+    std = scale / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, *, dtype=jnp.bfloat16) -> Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def rmsnorm_init(d: int) -> Array:
+    return jnp.zeros((d,), jnp.float32)  # stored as (scale - 1)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: Array, positions: Array, theta: float = 10_000.0) -> Array:
+    """Rotary embedding.  x: (..., S, H, D) with D even; positions: (..., S)."""
+    d = x.shape[-1]
+    assert d % 2 == 0, d
+    freq = theta ** (-jnp.arange(0, d, 2, dtype=jnp.float32) / d)   # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freq            # (..., S, D/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]  # (...,S,1,D/2)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blocked (online-softmax) attention — GQA, causal, sliding-window, softcap
+# ---------------------------------------------------------------------------
+
+def attention(q: Array, k: Array, v: Array, q_pos: Array, kv_pos: Array, *,
+              window: int = 0, causal: bool = True, softcap: float = 0.0,
+              kv_chunk: int = 1024, scale: Optional[float] = None,
+              q_extra: Optional[Array] = None,
+              k_extra: Optional[Array] = None) -> Array:
+    """Flash-style attention.
+
+    q: (B, S, Hq, D); k: (B, T, Hkv, D); v: (B, T, Hkv, Dv) (Dv may differ,
+    e.g. MLA-absorbed decode where v is the latent);
+    q_pos: (B, S) int32 query positions; kv_pos: (B, T) int32 key positions,
+    entries < 0 mark invalid (unwritten cache) slots.
+    window > 0 limits attention to keys with q_pos - kv_pos < window.
+    q_extra/k_extra: optional SECOND score contraction added before the
+    softmax (scores = q·kᵀ + q_extra·k_extraᵀ) — MLA decode keeps the
+    latent and rope caches separate this way instead of concatenating
+    differently-sharded tensors (dot distributes over concat, so the math
+    is identical).
+    Returns (B, S, Hq, Dv) in q.dtype; accumulation in float32.
+    """
+    B, S, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    qf = q.astype(jnp.float32).reshape(B, S, Hkv, G, D) * scale
+    qe = None
+    if q_extra is not None:
+        De = q_extra.shape[-1]
+        qe = q_extra.astype(jnp.float32).reshape(B, S, Hkv, G, De) * scale
+
+    C = min(kv_chunk, T)
+    n_chunks = -(-T // C)
+    pad = n_chunks * C - T
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+        if k_extra is not None:
+            k_extra = jnp.pad(k_extra, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    m0 = jnp.full((B, S, Hkv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, S, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((B, S, Hkv, G, Dv), jnp.float32)
+
+    def body(carry, idx):
+        # k/v stay loop-invariant (no transposed copy of the whole cache);
+        # each step dynamic-slices one chunk.
+        m, l, acc = carry
+        kj = jax.lax.dynamic_slice_in_dim(k, idx * C, C, axis=1)
+        vj = jax.lax.dynamic_slice_in_dim(v, idx * C, C, axis=1)
+        pj = jax.lax.dynamic_slice_in_dim(kv_pos, idx * C, C, axis=1)
+        s = jnp.einsum("bsngd,bcnd->bsngc", qf, kj.astype(jnp.float32))
+        if qe is not None:
+            kej = jax.lax.dynamic_slice_in_dim(k_extra, idx * C, C, axis=1)
+            s = s + jnp.einsum("bsngd,bcnd->bsngc", qe,
+                               kej.astype(jnp.float32))
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        ok = pj[:, None, :] >= 0                              # (B,1,C) valid
+        if causal:
+            ok &= pj[:, None, :] <= q_pos[:, :, None]
+        if window > 0:
+            ok &= pj[:, None, :] > q_pos[:, :, None] - window
+        s = jnp.where(ok[:, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        # fully-masked chunks: p would be exp(NEG_INF - NEG_INF)=1; zero them
+        p = jnp.where(ok[:, :, None, None, :], p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bsngc,bcnd->bsngd", p, vj.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  jnp.arange(n_chunks, dtype=jnp.int32))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, S, Hq, Dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (projections + rope + cache handling)
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg) -> dict:
+    ks = jax.random.split(key, 5)
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": dense_init(ks[0], d, hq * hd),
+        "wk": dense_init(ks[1], d, hkv * hd),
+        "wv": dense_init(ks[2], d, hkv * hd),
+        "wo": dense_init(ks[3], hq * hd, d, scale=1.0 / math.sqrt(2 * cfg.n_layers)),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((hq * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((hkv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((hkv * hd,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd)
+        p["k_norm"] = rmsnorm_init(hd)
+    return p
+
+
+def attn_apply(p: dict, x: Array, cfg, *, positions: Array,
+               cache: Optional[dict] = None, window: int = 0,
+               kv_chunk: int = 1024):
+    """x: (B,S,d). cache (decode): {"k","v": (B,T,Hkv,D), "pos": (B,T)}.
+    Returns (out, new_cache)."""
+    B, S, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.attn_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(B, S, hq, hd)
+    k = k.reshape(B, S, hkv, hd)
+    v = v.reshape(B, S, hkv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = constrain(rope(q, positions, cfg.rope_theta), "attn_q")
+    k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        full_k, full_v, kv_pos, new_cache = cache_update(cache, k, v, positions)
+        if S <= cache["k"].shape[1]:
+            k, v = full_k, full_v
+        else:
+            # sliding-window prefill into a ring shorter than the sequence:
+            # the ring only serves subsequent decode; attend over the local
+            # in-sequence keys (window mask below gives exact semantics).
+            kv_pos = positions
+    else:
+        kv_pos = positions
+    out = attention(q, k, v, positions, kv_pos, window=window,
+                    softcap=cfg.logits_softcap, kv_chunk=kv_chunk)
+    return row_dot(out.reshape(B, S, hq * hd), p["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# KV cache (linear or ring-buffer)
+# ---------------------------------------------------------------------------
+
+def cache_init(batch: int, cache_len: int, n_kv: int, head_dim: int,
+               dtype=jnp.bfloat16) -> dict:
+    return {
+        "k": jnp.zeros((batch, cache_len, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, cache_len, n_kv, head_dim), dtype),
+        "pos": jnp.full((batch, cache_len), -1, jnp.int32),
+    }
+
+
+def ring_write(buf: Array, val: Array, positions: Array,
+               kind: str = "") -> Array:
+    """SPMD-friendly ring-buffer write (no scatter, so GSPMD never
+    all-gathers the cache).
+
+    buf: (B, T, ...); val: (B, S, ...); positions: (B, S), slot = pos % T.
+
+    * S == 1 (decode): one-hot select over T — pure elementwise.
+    * S > 1 (prefill): positions are assumed contiguous per row starting
+      at positions[0,0] (standard prefill); the value block is placed by
+      a roll so wrapped rings stay correct, then merged by position mask.
+    """
+    pin = (lambda x: constrain(x, f"cache/{kind}")) if kind else (lambda x: x)
+    T = buf.shape[1]
+    S = val.shape[1]
+    val = val.astype(buf.dtype)
+    if S == 1:
+        slot = positions % T                                  # (B,1)
+        hit = jnp.arange(T, dtype=jnp.int32)[None, :] == slot  # (B,T)
+        hit = hit.reshape(hit.shape + (1,) * (buf.ndim - 2))
+        return pin(jnp.where(hit, val, buf))
+    if S > T:
+        val, positions = val[:, -T:], positions[:, -T:]
+        S = T
+    if S == T:
+        shift = positions[0, 0] % T
+        return pin(jnp.roll(val, shift, axis=1))
+    # S < T, no wrap assumed (prefill from slot p0, p0 + S <= T)
+    p0 = positions[0, 0] % T
+    return pin(jax.lax.dynamic_update_slice_in_dim(buf, val, p0, axis=1))
+
+
+def cache_update(cache: dict, k: Array, v: Array, positions: Array):
+    """Write S new entries at slot = position % cache_len (ring buffer;
+    for full caches cache_len >= max position so the ring never wraps).
+    When S > cache_len (sliding-window prefill) only the last cache_len
+    entries are written.  Returns (full_k, full_v, kv_pos, new_cache)."""
+    T = cache["k"].shape[1]
+    if k.shape[1] > T:
+        k, v, positions = k[:, -T:], v[:, -T:], positions[:, -T:]
+    new = {
+        "k": ring_write(cache["k"], k, positions, kind="k"),
+        "v": ring_write(cache["v"], v, positions, kind="v"),
+        "pos": ring_write(cache["pos"], positions, positions, kind="pos"),
+    }
+    return new["k"], new["v"], new["pos"], new
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def ffn_init(key, cfg, d_ff: Optional[int] = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], d, f),
+        "w_up": dense_init(ks[1], d, f),
+        "w_down": dense_init(ks[2], f, d, scale=1.0 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def ffn_apply(p: dict, x: Array) -> Array:
+    g = jax.nn.silu(x @ p["w_gate"].astype(x.dtype))
+    u = x @ p["w_up"].astype(x.dtype)
+    h = constrain(g * u, "ffn_hidden")
+    return row_dot(h, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts — sort-based dispatch (no (T,E,C) one-hot einsums)
+# ---------------------------------------------------------------------------
+
+def moe_init(key, cfg) -> dict:
+    d, f, e = cfg.d_model, cfg.d_expert, cfg.n_experts
+    ks = jax.random.split(key, 5)
+
+    def stack_init(k, d_in, d_out, scale=1.0):
+        return jax.vmap(lambda kk: dense_init(kk, d_in, d_out, scale=scale))(
+            jax.random.split(k, e))
+
+    p = {
+        "router": dense_init(ks[0], d, e, dtype=jnp.float32),
+        "w_gate": stack_init(ks[1], d, f),
+        "w_up": stack_init(ks[2], d, f),
+        "w_down": stack_init(ks[3], f, d, scale=1.0 / math.sqrt(2 * cfg.n_layers)),
+    }
+    if cfg.n_shared_experts:
+        import dataclasses as _dc
+        shared_cfg = _dc.replace(cfg, d_ff=cfg.d_expert * cfg.n_shared_experts)
+        p["shared"] = ffn_init(ks[4], shared_cfg, shared_cfg.d_ff)
+    return p
+
+
+def _moe_dispatch_group(xt: Array, gate_vals: Array, expert_idx: Array,
+                        E: int, K: int, C: int):
+    """Sort-based dispatch for ONE token group.  xt: (Tg, d);
+    gate_vals/expert_idx: (Tg, K).  Returns (buf (E,C,d), slot, src_token,
+    gates_sorted) for the gather-back."""
+    Tg, d = xt.shape
+    flat_e = expert_idx.reshape(Tg * K)
+    order = jnp.argsort(flat_e)                                  # stable
+    sorted_e = flat_e[order]
+    first_of_group = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    rank = jnp.arange(Tg * K) - first_of_group
+    keep = rank < C
+    slot = jnp.where(keep, sorted_e * C + rank, E * C)           # E*C = trash
+    src_token = order // K
+    buf = jnp.zeros((E * C + 1, d), xt.dtype).at[slot].set(
+        xt[src_token] * keep[:, None].astype(xt.dtype))
+    gates_sorted = gate_vals.reshape(Tg * K)[order] * keep
+    return buf[:-1].reshape(E, C, d), slot, src_token, gates_sorted
+
+
+def moe_apply(p: dict, x: Array, cfg) -> tuple[Array, Array]:
+    """Sort-based top-k MoE with **grouped dispatch**.  x: (B,S,d) ->
+    (out, aux_loss).
+
+    Tokens split into ``moe_groups`` contiguous groups (the launch layer
+    sets this to the data-parallel shard count via sharding hints); each
+    group builds its own per-expert capacity buffer with a group-local
+    argsort + gather, and experts run over the (G, E, C, d) buffer with E
+    sharded on the model axis (expert parallelism).  All data-dependent
+    gathers/scatters stay group-local, so GSPMD never materializes or
+    all-reduces a (T·K, d) tensor — the cross-device movement is the
+    buffer all-to-all, as in a real EP system.  Tokens beyond per-group
+    capacity are dropped (capacity-factor semantics).
+    """
+    from repro.models.hints import get_extra, get_mesh
+    B, S, d = x.shape
+    T = B * S
+    E, K = cfg.n_experts, cfg.top_k
+    mesh = get_mesh()
+    if mesh is not None and get_extra("moe_ep", False):
+        from repro.launch.mesh import data_axes, model_axis
+        from repro.models.moe_ep import moe_apply_ep
+        dp, mp = data_axes(mesh), model_axis(mesh)
+        n_mp = mesh.shape[mp]
+        n_dp = 1
+        for a in dp:
+            n_dp *= mesh.shape[a]
+        if (E % n_mp == 0 and B % n_dp == 0
+                and (B // n_dp) * S % n_mp == 0):
+            return moe_apply_ep(p, x, cfg, mesh, dp, mp)
+    G = int(get_extra("moe_groups", 1))
+    if T % G != 0:
+        G = 1
+    Tg = T // G
+    C = max(1, int(math.ceil(Tg * K / E * cfg.capacity_factor)))
+    C = -(-C // 8) * 8                 # layout-friendly multiple of 8
+    C = min(C, Tg * K)
+
+    xt = x.reshape(T, d)
+    logits = (xt.astype(jnp.float32) @ p["router"])              # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)              # (T,K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # --- load-balance auxiliary loss (Switch-style) ---------------------
+    me = probs.mean(axis=0)                                      # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[expert_idx.reshape(-1)].add(
+        1.0 / (T * K))
+    aux = cfg.router_aux_coef * E * jnp.sum(me * ce)
+
+    # --- grouped dispatch -------------------------------------------------
+    disp = jax.vmap(
+        lambda xg, gg, eg: _moe_dispatch_group(xg, gg, eg, E, K, C))
+    buf, slot, src_token, gates_sorted = disp(
+        xt.reshape(G, Tg, d), gate_vals.reshape(G, Tg, K),
+        expert_idx.reshape(G, Tg, K))
+    # pin the scatter output group-local (scatters stay on-shard), then
+    # reshard to expert-sharded — an explicit buffer all-to-all, the EP
+    # boundary a real expert-parallel system would have.  The barrier stops
+    # GSPMD from collapsing the two constraints into one.
+    buf = constrain(buf, "moe_buffer_local")
+    buf = jax.lax.optimization_barrier(buf)
+    buf = constrain(buf, "moe_buffer")                           # (G,E,C,d)
+
+    # --- batched expert FFN (E sharded on model -> expert parallelism) ---
+    g = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf,
+                               p["w_gate"].astype(x.dtype)))
+    u = jnp.einsum("gecd,edf->gecf", buf, p["w_up"].astype(x.dtype))
+    h = jnp.einsum("gecf,efd->gecd", g * u, p["w_down"].astype(x.dtype))
+    h = constrain(h, "moe_h")
+    h = jax.lax.optimization_barrier(h)
+    h = constrain(h, "moe_h_local")     # reverse a2a: back to group-local
+
+    # --- gather back + combine with gates (group-local scatter-add) ------
+    def comb(hg, sg, tg, gg):
+        h_flat = jnp.concatenate([hg.reshape(E * C, d),
+                                  jnp.zeros((1, d), hg.dtype)], axis=0)
+        per_assign = h_flat[sg]
+        return jnp.zeros((Tg, d), jnp.float32).at[tg].add(
+            per_assign.astype(jnp.float32) * gg[:, None])
+
+    out = jax.vmap(comb)(h, slot, src_token, gates_sorted).reshape(T, d)
+    out = constrain(out.astype(x.dtype), "moe_tokens")
+    if "shared" in p:
+        out = out + ffn_apply(p["shared"], xt)
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,130 @@
+"""Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437).
+
+Two execution paths over a *latent* KV cache (rank ``kv_lora_rank`` plus a
+shared ``qk_rope_dim`` rope key):
+
+* train/prefill: decompress the latent into per-head K/V and run normal
+  blocked attention (cheap when S tokens are processed at once);
+* decode: **matrix-absorbed** attention — queries are pushed through the
+  K up-projection so scores are taken directly against the latent cache,
+  and the attention output stays in latent space until the V up-projection.
+  Per-token decode therefore reads only ``kv_lora_rank + qk_rope_dim``
+  numbers per cached position instead of ``n_heads * (qk_dim + v_dim)``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.hints import constrain
+from repro.models.layers import attention, dense_init, rmsnorm, rmsnorm_init, rope
+
+Array = jax.Array
+
+
+def mla_init(key, cfg) -> dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], d, qr),
+        "q_norm": rmsnorm_init(qr),
+        "wq_b": dense_init(ks[1], qr, H * (dn + dr)),
+        "wkv_a": dense_init(ks[2], d, kr + dr),
+        "kv_norm": rmsnorm_init(kr),
+        "wk_b": dense_init(ks[3], kr, H * dn),
+        "wv_b": dense_init(ks[4], kr, H * dv),
+        "wo": dense_init(ks[5], H * dv, d, scale=1.0 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def mla_cache_init(batch: int, cache_len: int, cfg, dtype=jnp.bfloat16) -> dict:
+    return {
+        "ckv": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, cache_len, cfg.qk_rope_dim), dtype),
+        "pos": jnp.full((batch, cache_len), -1, jnp.int32),
+    }
+
+
+def _project_q(p, x, cfg, positions):
+    B, S, _ = x.shape
+    H, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = rmsnorm(x @ p["wq_a"].astype(x.dtype), p["q_norm"], cfg.norm_eps)
+    q = (q @ p["wq_b"].astype(x.dtype)).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(p, x, cfg, positions):
+    kr, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+    kv = x @ p["wkv_a"].astype(x.dtype)                          # (B,S,kr+dr)
+    ckv = rmsnorm(kv[..., :kr], p["kv_norm"], cfg.norm_eps)
+    krope = rope(kv[..., None, kr:], positions, cfg.rope_theta)[..., 0, :]
+    return ckv, krope
+
+
+def mla_apply(p: dict, x: Array, cfg, *, positions: Array,
+              cache: Optional[dict] = None, decode: bool = False,
+              kv_chunk: int = 1024):
+    """MLA block.  Returns (out, new_cache)."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kr = cfg.kv_lora_rank
+    scale = (dn + dr) ** -0.5
+
+    q_nope, q_rope = _project_q(p, x, cfg, positions)
+    ckv, krope = _project_kv_latent(p, x, cfg, positions)
+
+    new_cache = None
+    if cache is not None:
+        from repro.models.layers import ring_write
+        new_cache = {
+            "ckv": ring_write(cache["ckv"], ckv, positions, kind="ckv"),
+            "krope": ring_write(cache["krope"], krope, positions,
+                                kind="krope"),
+            "pos": ring_write(cache["pos"], positions, positions,
+                              kind="pos"),
+        }
+        ckv_all, krope_all, kv_pos = (new_cache["ckv"], new_cache["krope"],
+                                      new_cache["pos"])
+    else:
+        ckv_all, krope_all, kv_pos = ckv, krope, positions
+
+    if decode:
+        # --- absorbed path: score against the latent directly.  The rope
+        # term enters as a second contraction (q_extra/k_extra) so the
+        # latent and rope caches never get concatenated — they carry
+        # different shardings on the mesh. ---------------------------------
+        wk_b = p["wk_b"].astype(x.dtype).reshape(kr, H, dn)
+        q_lat = jnp.einsum("bshd,khd->bshk", q_nope, wk_b)       # (B,S,H,kr)
+        # align the absorbed queries' latent/rope dims with the cache
+        # sharding (kr and dr live on the model axis during decode)
+        q_lat = constrain(q_lat, "attn_q")
+        q_rope_c = constrain(q_rope, "attn_q")
+        v_lat = ckv_all[:, :, None, :]                           # (B,T,1,kr)
+        o_lat = attention(q_lat, v_lat, v_lat, positions, kv_pos,
+                          scale=scale, kv_chunk=kv_chunk,
+                          q_extra=q_rope_c,
+                          k_extra=krope_all[:, :, None, :])      # (B,S,H,kr)
+        wv_b = p["wv_b"].astype(x.dtype).reshape(kr, H, dv)
+        o = jnp.einsum("bshk,khd->bshd", o_lat, wv_b)
+    else:
+        # --- naive path: decompress K/V per head -------------------------
+        T = ckv_all.shape[1]
+        k_nope = (ckv_all @ p["wk_b"].astype(x.dtype)).reshape(B, T, H, dn)
+        v = (ckv_all @ p["wv_b"].astype(x.dtype)).reshape(B, T, H, dv)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(krope_all[:, :, None, :], (B, T, H, dr))],
+            axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        o = attention(q, k, v, positions, kv_pos, scale=scale, kv_chunk=kv_chunk)
+
+    out = o.reshape(B, S, H * dv) @ p["wo"].astype(x.dtype)
+    return out, new_cache

@@ -1,0 +1,229 @@
+"""State-space / linear-recurrence mixers: Mamba (selective scan) and
+RWKV6 "Finch" (data-dependent decay).
+
+Both are written as chunked sequential scans: an outer ``lax.scan`` over
+chunks with a rematerialized inner ``lax.scan`` over time steps, so the
+(B, d_inner, d_state) hidden states are never materialized over the full
+sequence — only chunk-boundary carries are saved for the backward pass.
+The per-chunk bodies are the compute hot spots mirrored by the Pallas
+``ssm_scan`` kernel in ``repro.kernels``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init
+
+Array = jax.Array
+
+SCAN_CHUNK = 128
+
+
+def _chunked_scan(step_fn, h0, xs, length: int, chunk: int = SCAN_CHUNK):
+    """Outer scan over chunks with rematerialized inner scan over steps.
+
+    xs: pytree of (S, ...) arrays (time-major). Returns (h_final, ys)
+    with ys time-major (S, ...).
+    """
+    c = min(chunk, length)
+    n_chunks = -(-length // c)
+    pad = n_chunks * c - length
+    if pad:
+        xs = jax.tree.map(lambda a: jnp.pad(a, [(0, pad)] + [(0, 0)] * (a.ndim - 1)), xs)
+    xs = jax.tree.map(lambda a: a.reshape((n_chunks, c) + a.shape[1:]), xs)
+
+    @jax.checkpoint
+    def chunk_body(h, xs_c):
+        return jax.lax.scan(step_fn, h, xs_c)
+
+    h, ys = jax.lax.scan(chunk_body, h0, xs)
+    ys = jax.tree.map(lambda a: a.reshape((n_chunks * c,) + a.shape[2:])[:length], ys)
+    return h, ys
+
+
+# ===========================================================================
+# Mamba
+# ===========================================================================
+
+def mamba_init(key, cfg) -> dict:
+    d, di, ds = cfg.d_model, cfg.mamba_d_inner, cfg.mamba_d_state
+    dtr, dc = cfg.mamba_dt_rank, cfg.mamba_d_conv
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A
+    A = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    dt_bias = jnp.log(jnp.expm1(jnp.exp(jax.random.uniform(
+        ks[5], (di,), jnp.float32,
+        math.log(1e-3), math.log(1e-1)))))  # inverse-softplus of U[1e-3,1e-1]
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di),
+        "conv_w": (jax.random.normal(ks[1], (dc, di), jnp.float32)
+                   / math.sqrt(dc)).astype(jnp.bfloat16),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": dense_init(ks[2], di, dtr + 2 * ds),
+        "dt_proj": dense_init(ks[3], dtr, di, scale=dtr ** 0.5),
+        "dt_bias": dt_bias,
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, d, scale=1.0 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array, prev: Optional[Array] = None):
+    """Depthwise causal conv over time.  x: (B,S,di), w: (K,di).
+    prev: (B,K-1,di) history for decode. Returns (y, new_history)."""
+    K = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)                      # (B,S+K-1,di)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i].astype(x.dtype) for i in range(K))
+    y = y + b.astype(x.dtype)
+    return y, xp[:, -(K - 1):, :]
+
+
+def _mamba_step(h, xs_t, A):
+    """One selective-scan step. h: (B,di,ds) f32.
+    xs_t = (x, dt, Bm, Cm): (B,di),(B,di),(B,ds),(B,ds)."""
+    x_t, dt_t, B_t, C_t = xs_t
+    x_t, dt_t = x_t.astype(jnp.float32), dt_t.astype(jnp.float32)
+    B_t, C_t = B_t.astype(jnp.float32), C_t.astype(jnp.float32)
+    dA = jnp.exp(dt_t[..., None] * A)                            # (B,di,ds)
+    h = dA * h + (dt_t * x_t)[..., None] * B_t[:, None, :]
+    y = jnp.einsum("bds,bs->bd", h, C_t)
+    return h, y
+
+
+def mamba_apply(p: dict, x: Array, cfg, *, cache: Optional[dict] = None):
+    """Mamba block. x: (B,S,d) -> (out, new_cache).
+    cache (decode): {"h": (B,di,ds) f32, "conv": (B,K-1,di)}."""
+    B, S, d = x.shape
+    di, ds = cfg.mamba_d_inner, cfg.mamba_d_state
+    dtr = cfg.mamba_dt_rank
+    xz = x @ p["in_proj"].astype(x.dtype)
+    xs, z = jnp.split(xz, 2, axis=-1)                            # (B,S,di)
+    conv_prev = cache["conv"] if cache is not None else None
+    xs, conv_new = _causal_conv(xs, p["conv_w"], p["conv_b"], conv_prev)
+    xs = jax.nn.silu(xs)
+
+    proj = xs @ p["x_proj"].astype(x.dtype)                      # (B,S,dtr+2ds)
+    dt, Bm, Cm = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"].astype(x.dtype)
+                         + p["dt_bias"].astype(x.dtype))         # (B,S,di)
+    A = -jnp.exp(p["A_log"])                                     # (di,ds) f32
+
+    h0 = cache["h"] if cache is not None else jnp.zeros((B, di, ds), jnp.float32)
+    step = lambda h, xs_t: _mamba_step(h, xs_t, A)
+    if S == 1:
+        h, y = step(h0, (xs[:, 0], dt[:, 0], Bm[:, 0], Cm[:, 0]))
+        y = y[:, None, :]
+    else:
+        tm = lambda a: jnp.moveaxis(a, 1, 0)                     # time-major
+        h, y = _chunked_scan(step, h0, (tm(xs), tm(dt), tm(Bm), tm(Cm)), S)
+        y = jnp.moveaxis(y, 0, 1)
+    y = y.astype(x.dtype) + xs * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    from repro.models.layers import row_dot
+    out = row_dot(y, p["out_proj"])
+    new_cache = None
+    if cache is not None:
+        from repro.models.hints import constrain
+        new_cache = {"h": constrain(h, "cache/h"),
+                     "conv": constrain(conv_new, "cache/conv")}
+    return out, new_cache
+
+
+def mamba_cache_init(batch: int, cfg, dtype=jnp.bfloat16) -> dict:
+    return {
+        "h": jnp.zeros((batch, cfg.mamba_d_inner, cfg.mamba_d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, cfg.mamba_d_inner), dtype),
+    }
+
+
+# ===========================================================================
+# RWKV6 (Finch)
+# ===========================================================================
+
+def rwkv_init(key, cfg) -> dict:
+    d, hd, lora = cfg.d_model, cfg.rwkv_head_dim, cfg.rwkv_decay_lora
+    H = cfg.rwkv_n_heads
+    ks = jax.random.split(key, 9)
+    return {
+        "mu": jax.random.uniform(ks[0], (5, d), jnp.float32),    # shift mix r,k,v,g,w
+        "wr": dense_init(ks[1], d, d),
+        "wk": dense_init(ks[2], d, d),
+        "wv": dense_init(ks[3], d, d),
+        "wg": dense_init(ks[4], d, d),
+        "wo": dense_init(ks[5], d, d, scale=1.0 / math.sqrt(2 * cfg.n_layers)),
+        "w0": jnp.zeros((d,), jnp.float32) - 0.5,                # decay base
+        "wA": dense_init(ks[6], d, lora),
+        "wB": dense_init(ks[7], lora, d),
+        "u": (jax.random.normal(ks[8], (H, hd), jnp.float32) * 0.1),  # bonus
+        "ln_x": rmsnorm_init(hd),
+    }
+
+
+def _rwkv_step(S, xs_t, u):
+    """S: (B,H,hd,hd) f32 [k-index, v-index].
+    xs_t = (r,k,v,w): each (B,H,hd); u: (1,H,hd) bonus (closed over)."""
+    r, k, v, w = xs_t
+    r = r.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    kv = k[..., :, None] * v[..., None, :]                       # (B,H,hd,hd)
+    o = jnp.einsum("bhi,bhij->bhj", r, S + u[..., None] * kv)    # (B,H,hd)
+    S = w[..., :, None] * S + kv
+    return S, o
+
+
+def rwkv_apply(p: dict, x: Array, cfg, *, cache: Optional[dict] = None):
+    """RWKV6 time-mix. x: (B,S,d) -> (out, new_cache).
+    cache (decode): {"state": (B,H,hd,hd) f32, "shift": (B,d)}."""
+    B, S, d = x.shape
+    H, hd = cfg.rwkv_n_heads, cfg.rwkv_head_dim
+    prev = cache["shift"][:, None, :] if cache is not None else jnp.zeros(
+        (B, 1, d), x.dtype)
+    xx = jnp.concatenate([prev, x[:, :-1, :]], axis=1)           # shifted
+    mu = p["mu"].astype(x.dtype)
+    xr, xk, xv, xg, xw = (x + (xx - x) * mu[i] for i in range(5))
+
+    r = (xr @ p["wr"].astype(x.dtype)).reshape(B, S, H, hd)
+    k = (xk @ p["wk"].astype(x.dtype)).reshape(B, S, H, hd)
+    v = (xv @ p["wv"].astype(x.dtype)).reshape(B, S, H, hd)
+    g = jax.nn.silu(xg @ p["wg"].astype(x.dtype))
+    # data-dependent decay (the Finch contribution)
+    w_dd = p["w0"].astype(jnp.float32) + (
+        jnp.tanh(xw @ p["wA"].astype(x.dtype)) @ p["wB"].astype(x.dtype)
+    ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_dd)).reshape(B, S, H, hd)             # in (0,1)
+
+    u = p["u"][None].astype(jnp.float32)                         # (1,H,hd)
+    S0 = cache["state"] if cache is not None else jnp.zeros(
+        (B, H, hd, hd), jnp.float32)
+    step = lambda S_, xs_t: _rwkv_step(S_, xs_t, u)
+    if S == 1:
+        S1, o = step(S0, (r[:, 0], k[:, 0], v[:, 0], w[:, 0]))
+        o = o[:, None]
+    else:
+        tm = lambda a: jnp.moveaxis(a, 1, 0)
+        S1, o = _chunked_scan(step, S0, (tm(r), tm(k), tm(v), tm(w)), S)
+        o = jnp.moveaxis(o, 0, 1)                                # (B,S,H,hd)
+    o = rmsnorm(o, p["ln_x"], cfg.norm_eps).astype(x.dtype)
+    from repro.models.layers import row_dot
+    out = row_dot(o.reshape(B, S, d) * g, p["wo"])
+    new_cache = None
+    if cache is not None:
+        from repro.models.hints import constrain
+        new_cache = {"state": constrain(S1, "cache/state"),
+                     "shift": constrain(x[:, -1, :], "cache/shift")}
+    return out, new_cache
+
+
+def rwkv_cache_init(batch: int, cfg, dtype=jnp.bfloat16) -> dict:
+    H, hd = cfg.rwkv_n_heads, cfg.rwkv_head_dim
+    return {
+        "state": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "shift": jnp.zeros((batch, cfg.d_model), dtype),
+    }

@@ -1,0 +1,282 @@
+"""Generic decoder model: builds any assigned architecture from its
+``ModelConfig`` (dense / MoE / SSM / hybrid / VLM / audio backbones).
+
+Depth is organised as ``prefix_layers`` (unrolled) + one scanned stack of
+repeating periods (``cfg.stacks``), so a 126-layer model lowers to HLO the
+size of one period.  Pre-norm residual blocks:
+
+    x = x + mixer(norm1(x));  x = x + ffn(norm2(x))
+
+Decode caches are pytrees mirroring the layer structure; stack caches have
+a leading ``n_periods`` axis and are scanned together with the stacked
+parameters.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mla, ssm
+from repro.models.hints import constrain
+from repro.models.config import ATTN, DENSE, MAMBA, MOE, RWKV, SWA, ModelConfig
+from repro.models.layers import (attn_apply, attn_init, cache_init, dense_init,
+                                 embed_init, ffn_apply, ffn_init, moe_apply,
+                                 moe_init, rmsnorm, rmsnorm_init)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init / apply
+# ---------------------------------------------------------------------------
+
+def layer_init(key, spec, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {"norm1": rmsnorm_init(cfg.d_model), "norm2": rmsnorm_init(cfg.d_model)}
+    if spec.mixer in (ATTN, SWA):
+        p["mixer"] = mla.mla_init(k1, cfg) if cfg.use_mla else attn_init(k1, cfg)
+    elif spec.mixer == MAMBA:
+        p["mixer"] = ssm.mamba_init(k1, cfg)
+    elif spec.mixer == RWKV:
+        p["mixer"] = ssm.rwkv_init(k1, cfg)
+    p["ffn"] = moe_init(k2, cfg) if spec.ffn == MOE else ffn_init(k2, cfg)
+    return p
+
+
+def layer_cache_init(spec, cfg: ModelConfig, batch: int, cache_len: int,
+                     dtype=jnp.bfloat16):
+    if spec.mixer == ATTN:
+        if cfg.use_mla:
+            return mla.mla_cache_init(batch, cache_len, cfg, dtype)
+        return cache_init(batch, cache_len, cfg.n_kv_heads, cfg.head_dim, dtype)
+    if spec.mixer == SWA:
+        ring = min(cfg.sliding_window, cache_len)
+        return cache_init(batch, ring, cfg.n_kv_heads, cfg.head_dim, dtype)
+    if spec.mixer == MAMBA:
+        return ssm.mamba_cache_init(batch, cfg, dtype)
+    if spec.mixer == RWKV:
+        return ssm.rwkv_cache_init(batch, cfg, dtype)
+    raise ValueError(spec.mixer)
+
+
+def layer_apply(lp: dict, spec, cfg: ModelConfig, x: Array, positions: Array,
+                cache: Optional[dict], *, decode: bool = False,
+                kv_chunk: int = 1024, masked_slots: bool = False):
+    """Returns (x, new_cache, aux_loss).
+
+    ``masked_slots``: batch rows whose positions are all < 0 (idle serving
+    slots) keep their previous cache/state verbatim — required by the
+    continuous batcher, skipped on hot paths to avoid extra cache traffic.
+    """
+    x = constrain(x, "residual")
+    h = rmsnorm(x, lp["norm1"], cfg.norm_eps)
+    if spec.mixer in (ATTN, SWA):
+        window = cfg.sliding_window if spec.mixer == SWA else 0
+        if cfg.use_mla:
+            h, new_cache = mla.mla_apply(lp["mixer"], h, cfg, positions=positions,
+                                         cache=cache, decode=decode,
+                                         kv_chunk=kv_chunk)
+        else:
+            h, new_cache = attn_apply(lp["mixer"], h, cfg, positions=positions,
+                                      cache=cache, window=window,
+                                      kv_chunk=kv_chunk)
+    elif spec.mixer == MAMBA:
+        h, new_cache = ssm.mamba_apply(lp["mixer"], h, cfg, cache=cache)
+    elif spec.mixer == RWKV:
+        h, new_cache = ssm.rwkv_apply(lp["mixer"], h, cfg, cache=cache)
+    else:
+        raise ValueError(spec.mixer)
+    if masked_slots and cache is not None and new_cache is not None:
+        valid = (positions >= 0).any(axis=1)
+        new_cache = jax.tree.map(
+            lambda n, o: jnp.where(
+                valid.reshape((-1,) + (1,) * (n.ndim - 1)), n, o),
+            new_cache, cache)
+    x = x + h
+
+    h = rmsnorm(x, lp["norm2"], cfg.norm_eps)
+    if spec.ffn == MOE:
+        h, aux = moe_apply(lp["ffn"], h, cfg)
+    else:
+        h, aux = ffn_apply(lp["ffn"], h), jnp.zeros((), jnp.float32)
+    return x + h, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+# ---------------------------------------------------------------------------
+
+def init_params(rng, cfg: ModelConfig) -> dict:
+    keys = jax.random.split(rng, 6)
+    params = {"embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model),
+              "final_norm": rmsnorm_init(cfg.d_model)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], cfg.d_model, cfg.vocab_size)
+    if cfg.ext_embed_dim:
+        params["ext_proj"] = dense_init(keys[2], cfg.ext_embed_dim, cfg.d_model)
+
+    if cfg.prefix_layers:
+        pks = jax.random.split(keys[3], len(cfg.prefix_layers))
+        params["prefix"] = tuple(
+            layer_init(pk, spec, cfg) for pk, spec in zip(pks, cfg.prefix_layers))
+
+    for stack in cfg.stacks:
+        def period_init(k):
+            lks = jax.random.split(k, len(stack.period))
+            return tuple(layer_init(lk, spec, cfg)
+                         for lk, spec in zip(lks, stack.period))
+        params["stack"] = jax.vmap(period_init)(
+            jax.random.split(keys[4], stack.n_periods))
+
+    if cfg.mtp_depth:
+        mk = jax.random.split(keys[5], 3)
+        params["mtp"] = {
+            "norm_h": rmsnorm_init(cfg.d_model),
+            "norm_e": rmsnorm_init(cfg.d_model),
+            "proj": dense_init(mk[0], 2 * cfg.d_model, cfg.d_model),
+            "layer": layer_init(mk[1], cfg.period[-1], cfg),
+        }
+    return params
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    caches = {}
+    if cfg.prefix_layers:
+        caches["prefix"] = tuple(
+            layer_cache_init(spec, cfg, batch, cache_len, dtype)
+            for spec in cfg.prefix_layers)
+    for stack in cfg.stacks:
+        one = tuple(layer_cache_init(spec, cfg, batch, cache_len, dtype)
+                    for spec in stack.period)
+        caches["stack"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (stack.n_periods,) + a.shape),
+            one)
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params: dict, cfg: ModelConfig, batch: dict) -> Array:
+    """batch: {"tokens": (B,S) int32} and/or {"embeds": (B,S,ext_dim)}."""
+    if "embeds" in batch:   # vlm/audio frontend stub output
+        x = batch["embeds"].astype(jnp.bfloat16) @ params["ext_proj"].astype(
+            jnp.bfloat16)
+        if "tokens" in batch:  # mixed modality: add token embeddings
+            x = x + jnp.take(params["embed"], batch["tokens"], axis=0)
+        return x
+    return jnp.take(params["embed"], batch["tokens"], axis=0)
+
+
+def unembed(params: dict, cfg: ModelConfig, h: Array) -> Array:
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    return (h @ head.astype(h.dtype)).astype(jnp.float32)
+
+
+def _remat_wrap(body, remat, remat_policy):
+    if not remat:
+        return body
+    policy = None
+    if remat_policy == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+    elif remat_policy == "dots_no_batch":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint(body, policy=policy)
+
+
+def forward(params: dict, cfg: ModelConfig, batch: dict, *,
+            caches: Optional[dict] = None, positions: Optional[Array] = None,
+            decode: bool = False, remat: bool = False, kv_chunk: int = 1024,
+            compute_logits: bool = True, masked_slots: bool = False,
+            remat_policy: str = "full"):
+    """Run the decoder.
+
+    Returns (logits_or_hidden, aux_loss, new_caches).  ``positions``
+    defaults to arange(S) broadcast over batch.  ``decode=True`` selects
+    single-token cache paths (absorbed MLA etc.).
+    """
+    x = embed_inputs(params, cfg, batch)
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    aux = jnp.zeros((), jnp.float32)
+    new_caches = {} if caches is not None else None
+
+    for i, spec in enumerate(cfg.prefix_layers):
+        c = caches["prefix"][i] if caches is not None else None
+        x, nc, a = layer_apply(params["prefix"][i], spec, cfg, x, positions, c,
+                               decode=decode, kv_chunk=kv_chunk,
+                               masked_slots=masked_slots)
+        aux += a
+        if caches is not None:
+            new_caches.setdefault("prefix", []).append(nc)
+    if caches is not None and cfg.prefix_layers:
+        new_caches["prefix"] = tuple(new_caches["prefix"])
+
+    for stack in cfg.stacks:
+        def period_apply(x, pp, pc):
+            a_tot = jnp.zeros((), jnp.float32)
+            ncs = []
+            for j, spec in enumerate(stack.period):
+                x, nc, a = layer_apply(pp[j], spec, cfg, x, positions,
+                                       pc[j] if pc is not None else None,
+                                       decode=decode, kv_chunk=kv_chunk,
+                                       masked_slots=masked_slots)
+                ncs.append(nc)
+                a_tot += a
+            return x, tuple(ncs), a_tot
+
+        if caches is not None:
+            def body(carry, xs):
+                x, a = carry
+                pp, pc = xs
+                x, ncs, da = period_apply(x, pp, pc)
+                return (x, a + da), ncs
+            body = _remat_wrap(body, remat, remat_policy)
+            (x, aux), stack_caches = jax.lax.scan(
+                body, (x, aux), (params["stack"], caches["stack"]))
+            new_caches["stack"] = stack_caches
+        else:
+            def body(carry, pp):
+                x, a = carry
+                x, _, da = period_apply(x, pp, None)
+                return (x, a + da), None
+            body = _remat_wrap(body, remat, remat_policy)
+            (x, aux), _ = jax.lax.scan(body, (x, aux), params["stack"])
+
+    h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    out = unembed(params, cfg, h) if compute_logits else h
+    return out, aux, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Multi-token prediction head (DeepSeek-V3 MTP, depth 1)
+# ---------------------------------------------------------------------------
+
+def mtp_hidden(params: dict, cfg: ModelConfig, h: Array, next_tokens: Array,
+               positions: Array):
+    """DeepSeek-style MTP module: predict token t+2 from hidden h_t fused
+    with the embedding of token t+1.
+
+    h: (B,S,d) final hidden (pre-head); next_tokens: (B,S) = token t+1.
+    Returns (hidden for the shared head, aux).
+    """
+    mp = params["mtp"]
+    e = jnp.take(params["embed"], next_tokens, axis=0)
+    z = jnp.concatenate([rmsnorm(h, mp["norm_h"], cfg.norm_eps),
+                         rmsnorm(e, mp["norm_e"], cfg.norm_eps)], axis=-1)
+    z = z @ mp["proj"].astype(z.dtype)
+    z, _, a = layer_apply(mp["layer"], cfg.period[-1], cfg, z, positions, None)
+    return rmsnorm(z, params["final_norm"], cfg.norm_eps), a
+
+
+def mtp_logits(params: dict, cfg: ModelConfig, h: Array, next_tokens: Array,
+               positions: Array):
+    hN, a = mtp_hidden(params, cfg, h, next_tokens, positions)
+    return unembed(params, cfg, hN), a

