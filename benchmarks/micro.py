@@ -51,6 +51,59 @@ def kernel_bench() -> List[dict]:
     return rows
 
 
+def engine_bench() -> List[dict]:
+    """Serving-engine microbench: chunked-prefill admission (vs the seed's
+    token-level equivalent, chunk=1) and the batched decode tick."""
+    import dataclasses
+
+    from repro.configs import get_smoke_config
+    from repro.models.transformer import init_params
+    from repro.serve.engine import Request, ServingEngine
+
+    cfg = dataclasses.replace(get_smoke_config("gpt3-24l"), vocab_size=128,
+                              d_model=128, d_ff=256, n_heads=4, n_kv_heads=4,
+                              head_dim=32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    S, slots, cache_len = 64, 4, 128
+    prompt = list(range(1, S + 1))
+
+    def admit_us(chunk: int) -> float:
+        eng = ServingEngine(params, cfg, slots=slots, cache_len=cache_len,
+                            chunk=chunk)
+        eng.warmup()                      # compile both engine shapes
+        eng.submit(Request(0, prompt, max_new=1))
+        t0 = time.perf_counter()
+        eng._admit()
+        jax.block_until_ready(eng.caches)
+        return (time.perf_counter() - t0) * 1e6
+
+    us_tokenwise = admit_us(1)            # seed behaviour: S jitted calls
+    us_chunked = admit_us(16)             # ceil(S/16) = 4 jitted calls
+    rows = [{"name": f"engine/admit_{S}tok_chunk16",
+             "us_per_call": us_chunked,
+             "derived": f"{us_tokenwise/us_chunked:.1f}x_vs_tokenwise"},
+            {"name": f"engine/admit_{S}tok_chunk1",
+             "us_per_call": us_tokenwise,
+             "derived": f"{S}_jit_calls"}]
+
+    eng = ServingEngine(params, cfg, slots=slots, cache_len=cache_len,
+                        chunk=16)
+    eng.warmup()
+    for i in range(slots):
+        eng.submit(Request(i, prompt[: 8 + i], max_new=64))
+    eng.tick()                            # admissions + first tick
+    n = 20
+    t0 = time.perf_counter()
+    for _ in range(n):
+        eng.tick()
+    jax.block_until_ready(eng.caches)
+    us_tick = (time.perf_counter() - t0) / n * 1e6
+    rows.append({"name": f"engine/tick_{slots}slots",
+                 "us_per_call": us_tick,
+                 "derived": f"{us_tick / slots:.0f}us_per_slot_token"})
+    return rows
+
+
 def scheduler_bench() -> List[dict]:
     from repro.core.dag import build_model_dag
     from repro.core.decomposer import decompose_contiguous

@@ -34,6 +34,7 @@ def main() -> None:
         ("table1", figures.table1_cost),
         ("claims", figures.paper_claims_check),
         ("kernels", micro.kernel_bench),
+        ("engine", micro.engine_bench),
         ("scheduler", micro.scheduler_bench),
         ("compression", micro.compression_bench),
         ("pipeline", micro.pipeline_bench),

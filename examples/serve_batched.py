@@ -1,11 +1,13 @@
-"""Batched serving example: continuous batching with mixed prompt lengths
-and request arrival between ticks, on any assigned architecture
-(including the hybrid/SSM ones, whose decode uses recurrent state).
+"""Batched serving example: chunked-prefill continuous batching with
+mixed prompt lengths and request arrival between ticks, on any assigned
+architecture (including the hybrid/SSM ones, whose decode uses recurrent
+state).  Admission costs ceil(S/chunk) jitted steps per prompt; the
+decode tick is one jitted step for all slots.
 
     PYTHONPATH=src python examples/serve_batched.py --arch rwkv6-7b
 """
 import argparse
-import time
+import math
 
 import jax
 
@@ -18,11 +20,13 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=list(ALL_ARCHS), default="rwkv6-7b")
     ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--chunk", type=int, default=4)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
     params = init_params(jax.random.PRNGKey(0), cfg)
-    engine = ServingEngine(params, cfg, slots=args.slots, cache_len=96)
+    engine = ServingEngine(params, cfg, slots=args.slots, cache_len=96,
+                           chunk=args.chunk)
 
     # first wave
     for i in range(4):
@@ -34,9 +38,16 @@ def main():
             engine.submit(Request(100, [7, 8, 9, 10], max_new=5))
             engine.submit(Request(101, [7, 8, 9, 10], max_new=5))
     done = sorted(engine.finished, key=lambda r: r.req_id)
+    st = engine.stats
     print(f"{cfg.name}: {len(done)} requests over {ticks} engine ticks")
+    print(f"  {st['prefill_calls']} chunked-prefill steps (chunk="
+          f"{engine.chunk}) + {st['decode_calls']} decode steps for "
+          f"{st['admitted']} admissions")
     for r in done:
         print(f"  req{r.req_id:3d} prompt={r.prompt} -> {r.generated}")
+    # admission cost is ceil(S/chunk) steps per prompt, never S
+    expected = sum(math.ceil(len(r.prompt) / engine.chunk) for r in done)
+    assert st["prefill_calls"] == expected, (st["prefill_calls"], expected)
     # same-prompt requests must decode identically (slot isolation)
     assert done[-1].generated == done[-2].generated
     ref = generate(params, cfg,

@@ -133,7 +133,13 @@ class Bus:
         self.bytes_sent[(src, dst)] = self.bytes_sent.get((src, dst), 0.0) + nbytes
 
     def recv(self, dst: int, key: str) -> Array:
-        return self.mailboxes[dst].pop(key)
+        box = self.mailboxes.get(dst)
+        if not box or key not in box:
+            raise KeyError(
+                f"Bus.recv: no message {key!r} in mailbox of dst={dst} "
+                f"(available keys: {sorted(box) if box else []}) — "
+                f"a DAG cut is mis-scheduled or the producer never sent")
+        return box.pop(key)
 
     @property
     def total_bytes(self) -> float:

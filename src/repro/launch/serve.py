@@ -1,8 +1,13 @@
-"""Serving launcher: batched continuous-batching engine over a smoke
-config (CPU) — the production-mesh serve path is proven by dryrun.py.
+"""Serving launcher: chunked-prefill continuous-batching engine over a
+smoke config (CPU) — the production-mesh serve path is proven by dryrun.py.
+
+The engine runs exactly two steady-state jitted shapes: the chunked-
+prefill step ``(slots, chunk)`` and the decode tick ``(slots, 1)``;
+``--warmup`` compiles both ahead of traffic and reports the compile time
+separately from serving throughput.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b \
-        --requests 8 --max-new 16 --slots 4
+        --requests 8 --max-new 16 --slots 4 --chunk 16
 """
 from __future__ import annotations
 
@@ -23,13 +28,24 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--chunk", type=int, default=16,
+                    help="prefill chunk: admission costs ceil(S/chunk) "
+                         "jitted steps instead of S")
+    ap.add_argument("--no-warmup", action="store_true",
+                    help="skip ahead-of-traffic compilation of the two "
+                         "engine shapes")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
     engine = ServingEngine(params, cfg, slots=args.slots,
-                           cache_len=args.cache_len)
+                           cache_len=args.cache_len, chunk=args.chunk)
+    if not args.no_warmup:
+        t0 = time.time()
+        engine.warmup()
+        print(f"warmup: compiled prefill ({args.slots},{engine.chunk}) + "
+              f"decode ({args.slots},1) in {time.time() - t0:.2f}s")
     key = jax.random.PRNGKey(args.seed + 1)
     for i in range(args.requests):
         key, sub = jax.random.split(key)
@@ -40,8 +56,12 @@ def main():
     done = engine.run()
     dt = time.time() - t0
     toks = sum(len(r.generated) for r in done)
+    st = engine.stats
     print(f"{cfg.name}: served {len(done)} requests, {toks} tokens in "
           f"{dt:.2f}s ({toks/dt:.1f} tok/s, slots={args.slots})")
+    print(f"  engine calls: {st['prefill_calls']} prefill (chunk="
+          f"{engine.chunk}) + {st['decode_calls']} decode ticks, "
+          f"{st['admitted']} admissions")
     for r in sorted(done, key=lambda r: r.req_id)[:4]:
         print(f"  req{r.req_id}: prompt={r.prompt} -> {r.generated}")
 

@@ -190,9 +190,11 @@ def attn_init(key, cfg) -> dict:
 
 def attn_apply(p: dict, x: Array, cfg, *, positions: Array,
                cache: Optional[dict] = None, window: int = 0,
-               kv_chunk: int = 1024):
+               kv_chunk: int = 1024, masked_slots: bool = False):
     """x: (B,S,d). cache (decode): {"k","v": (B,T,Hkv,D), "pos": (B,T)}.
-    Returns (out, new_cache)."""
+    ``masked_slots=True`` selects the per-row masked cache write
+    (continuous-batching chunked prefill: rows with position -1 are
+    write no-ops).  Returns (out, new_cache)."""
     B, S, d = x.shape
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     q = x @ p["wq"].astype(x.dtype)
@@ -213,14 +215,32 @@ def attn_apply(p: dict, x: Array, cfg, *, positions: Array,
 
     new_cache = None
     if cache is not None:
-        full_k, full_v, kv_pos, new_cache = cache_update(cache, k, v, positions)
-        if S <= cache["k"].shape[1]:
-            k, v = full_k, full_v
+        if masked_slots and S > 1 and window > 0:
+            # chunked prefill against a populated sliding-window ring:
+            # writing the chunk first can EVICT keys still inside the
+            # earliest in-chunk queries' windows (ring shorter than the
+            # prompt).  Attend over [cache-before-write ∥ current chunk]
+            # — position masks give exact semantics, pre-write slots hold
+            # older positions (or -1), so nothing is double-counted — and
+            # write separately.  Full caches (window == 0) never wrap, so
+            # they take the cheaper write-then-attend path below.
+            old_k, old_v, old_pos = cache["k"], cache["v"], cache["pos"]
+            _, _, _, new_cache = cache_update(cache, k, v, positions,
+                                              per_row=True)
+            k = jnp.concatenate([old_k, k.astype(old_k.dtype)], axis=1)
+            v = jnp.concatenate([old_v, v.astype(old_v.dtype)], axis=1)
+            kv_pos = jnp.concatenate([old_pos, positions], axis=1)
         else:
-            # sliding-window prefill into a ring shorter than the sequence:
-            # the ring only serves subsequent decode; attend over the local
-            # in-sequence keys (window mask below gives exact semantics).
-            kv_pos = positions
+            full_k, full_v, kv_pos, new_cache = cache_update(
+                cache, k, v, positions, per_row=masked_slots)
+            if S <= cache["k"].shape[1]:
+                k, v = full_k, full_v
+            else:
+                # sliding-window prefill into a ring shorter than the
+                # sequence: the ring only serves subsequent decode; attend
+                # over the local in-sequence keys (window mask below gives
+                # exact semantics).
+                kv_pos = positions
     else:
         kv_pos = positions
     out = attention(q, k, v, positions, kv_pos, window=window,
@@ -242,29 +262,49 @@ def cache_init(batch: int, cache_len: int, n_kv: int, head_dim: int,
 
 
 def ring_write(buf: Array, val: Array, positions: Array,
-               kind: str = "") -> Array:
+               kind: str = "", per_row: bool = False) -> Array:
     """SPMD-friendly ring-buffer write (no scatter, so GSPMD never
     all-gathers the cache).
 
     buf: (B, T, ...); val: (B, S, ...); positions: (B, S), slot = pos % T.
+    Entries with position < 0 are never written (masked serving slots).
 
     * S == 1 (decode): one-hot select over T — pure elementwise.
-    * S > 1 (prefill): positions are assumed contiguous per row starting
-      at positions[0,0] (standard prefill); the value block is placed by
-      a roll so wrapped rings stay correct, then merged by position mask.
+    * S > 1, per_row=False (hot-path prefill): positions are assumed
+      contiguous AND row-uniform, starting at positions[0,0]; the value
+      block is placed by a roll so wrapped rings stay correct.
+    * S > 1, per_row=True (continuous-batching chunked prefill): rows may
+      start at different slots and carry invalid (pos < 0) entries; each
+      row is placed by a gather-roll and merged entry-wise on position
+      validity, so idle slots and padded tails are write no-ops.
     """
     pin = (lambda x: constrain(x, f"cache/{kind}")) if kind else (lambda x: x)
     T = buf.shape[1]
     S = val.shape[1]
     val = val.astype(buf.dtype)
+    trail = (1,) * (buf.ndim - 2)
     if S == 1:
         slot = positions % T                                  # (B,1)
-        hit = jnp.arange(T, dtype=jnp.int32)[None, :] == slot  # (B,T)
-        hit = hit.reshape(hit.shape + (1,) * (buf.ndim - 2))
+        hit = (jnp.arange(T, dtype=jnp.int32)[None, :] == slot) \
+            & (positions >= 0)                                 # (B,T)
+        hit = hit.reshape(hit.shape + trail)
         return pin(jnp.where(hit, val, buf))
     if S > T:
         val, positions = val[:, -T:], positions[:, -T:]
         S = T
+    if per_row:
+        # wrap-safe per-row placement: out[b, j] <- val[b, (j - p0_b) % T]
+        p0 = positions[:, :1] % T                              # (B,1)
+        if S < T:
+            val = jnp.pad(val, ((0, 0), (0, T - S)) + ((0, 0),) * (val.ndim - 2))
+            positions = jnp.pad(positions, ((0, 0), (0, T - S)),
+                                constant_values=-1)
+        src = (jnp.arange(T, dtype=jnp.int32)[None, :] - p0) % T  # (B,T)
+        rolled = jnp.take_along_axis(val, src.reshape(src.shape + trail),
+                                     axis=1)
+        written = jnp.take_along_axis(positions, src, axis=1) >= 0
+        return pin(jnp.where(written.reshape(written.shape + trail),
+                             rolled, buf))
     if S == T:
         shift = positions[0, 0] % T
         return pin(jnp.roll(val, shift, axis=1))
@@ -273,18 +313,22 @@ def ring_write(buf: Array, val: Array, positions: Array,
     return pin(jax.lax.dynamic_update_slice_in_dim(buf, val, p0, axis=1))
 
 
-def cache_update(cache: dict, k: Array, v: Array, positions: Array):
+def cache_update(cache: dict, k: Array, v: Array, positions: Array,
+                 per_row: bool = False):
     """Write S new entries at slot = position % cache_len (ring buffer;
     for full caches cache_len >= max position so the ring never wraps).
     When S > cache_len (sliding-window prefill) only the last cache_len
-    entries are written.  Returns (full_k, full_v, kv_pos, new_cache)."""
+    entries are written.  ``per_row=True`` selects the masked per-row
+    write (continuous-batching chunked prefill — see ``ring_write``).
+    Returns (full_k, full_v, kv_pos, new_cache)."""
     T = cache["k"].shape[1]
     if k.shape[1] > T:
         k, v, positions = k[:, -T:], v[:, -T:], positions[:, -T:]
     new = {
-        "k": ring_write(cache["k"], k, positions, kind="k"),
-        "v": ring_write(cache["v"], v, positions, kind="v"),
-        "pos": ring_write(cache["pos"], positions, positions, kind="pos"),
+        "k": ring_write(cache["k"], k, positions, kind="k", per_row=per_row),
+        "v": ring_write(cache["v"], v, positions, kind="v", per_row=per_row),
+        "pos": ring_write(cache["pos"], positions, positions, kind="pos",
+                          per_row=per_row),
     }
     return new["k"], new["v"], new["pos"], new
 

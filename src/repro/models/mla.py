@@ -71,8 +71,10 @@ def _project_kv_latent(p, x, cfg, positions):
 
 def mla_apply(p: dict, x: Array, cfg, *, positions: Array,
               cache: Optional[dict] = None, decode: bool = False,
-              kv_chunk: int = 1024):
-    """MLA block.  Returns (out, new_cache)."""
+              kv_chunk: int = 1024, masked_slots: bool = False):
+    """MLA block.  Returns (out, new_cache).  ``masked_slots=True``
+    selects the per-row masked cache write (continuous-batching chunked
+    prefill: rows with position -1 are write no-ops)."""
     B, S, d = x.shape
     H = cfg.n_heads
     dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
@@ -86,11 +88,12 @@ def mla_apply(p: dict, x: Array, cfg, *, positions: Array,
     if cache is not None:
         from repro.models.layers import ring_write
         new_cache = {
-            "ckv": ring_write(cache["ckv"], ckv, positions, kind="ckv"),
+            "ckv": ring_write(cache["ckv"], ckv, positions, kind="ckv",
+                              per_row=masked_slots),
             "krope": ring_write(cache["krope"], krope, positions,
-                                kind="krope"),
+                                kind="krope", per_row=masked_slots),
             "pos": ring_write(cache["pos"], positions, positions,
-                              kind="pos"),
+                              kind="pos", per_row=masked_slots),
         }
         ckv_all, krope_all, kv_pos = (new_cache["ckv"], new_cache["krope"],
                                       new_cache["pos"])

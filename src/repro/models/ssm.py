@@ -28,12 +28,26 @@ def _chunked_scan(step_fn, h0, xs, length: int, chunk: int = SCAN_CHUNK):
 
     xs: pytree of (S, ...) arrays (time-major). Returns (h_final, ys)
     with ys time-major (S, ...).
+
+    Padded tail steps (length not a multiple of the chunk) are state
+    no-ops: a decay/transition step on zero-padding is NOT the identity
+    (RWKV decays by w(0), Mamba by exp(dt(0)·A)), so without gating the
+    returned carry would be corrupted for any cached prefill with
+    length > chunk and length % chunk != 0.
     """
     c = min(chunk, length)
     n_chunks = -(-length // c)
     pad = n_chunks * c - length
     if pad:
         xs = jax.tree.map(lambda a: jnp.pad(a, [(0, pad)] + [(0, 0)] * (a.ndim - 1)), xs)
+        valid = jnp.arange(n_chunks * c) < length
+        inner = step_fn
+
+        def step_fn(h, xs_v):  # noqa: F811 — gated wrapper over the step
+            xs_t, v = xs_v
+            h2, y = inner(h, xs_t)
+            return jax.tree.map(lambda a, b: jnp.where(v, a, b), h2, h), y
+        xs = (xs, valid)
     xs = jax.tree.map(lambda a: a.reshape((n_chunks, c) + a.shape[1:]), xs)
 
     @jax.checkpoint

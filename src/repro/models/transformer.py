@@ -70,6 +70,9 @@ def layer_apply(lp: dict, spec, cfg: ModelConfig, x: Array, positions: Array,
     ``masked_slots``: batch rows whose positions are all < 0 (idle serving
     slots) keep their previous cache/state verbatim — required by the
     continuous batcher, skipped on hot paths to avoid extra cache traffic.
+    Attention-family caches get this entry-wise from the per-row masked
+    ring write (valid for multi-token chunked prefill against a populated
+    cache); SSM/RWKV recurrent states are restored row-wise after the scan.
     """
     x = constrain(x, "residual")
     h = rmsnorm(x, lp["norm1"], cfg.norm_eps)
@@ -78,18 +81,24 @@ def layer_apply(lp: dict, spec, cfg: ModelConfig, x: Array, positions: Array,
         if cfg.use_mla:
             h, new_cache = mla.mla_apply(lp["mixer"], h, cfg, positions=positions,
                                          cache=cache, decode=decode,
-                                         kv_chunk=kv_chunk)
+                                         kv_chunk=kv_chunk,
+                                         masked_slots=masked_slots)
         else:
             h, new_cache = attn_apply(lp["mixer"], h, cfg, positions=positions,
                                       cache=cache, window=window,
-                                      kv_chunk=kv_chunk)
+                                      kv_chunk=kv_chunk,
+                                      masked_slots=masked_slots)
     elif spec.mixer == MAMBA:
         h, new_cache = ssm.mamba_apply(lp["mixer"], h, cfg, cache=cache)
     elif spec.mixer == RWKV:
         h, new_cache = ssm.rwkv_apply(lp["mixer"], h, cfg, cache=cache)
     else:
         raise ValueError(spec.mixer)
-    if masked_slots and cache is not None and new_cache is not None:
+    if (masked_slots and cache is not None and new_cache is not None
+            and spec.mixer in (MAMBA, RWKV)):
+        # recurrent states are scan carries, not position-addressed writes:
+        # rows whose positions are all < 0 ran the scan on padding — put
+        # their previous state back wholesale
         valid = (positions >= 0).any(axis=1)
         new_cache = jax.tree.map(
             lambda n, o: jnp.where(

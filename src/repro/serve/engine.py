@@ -1,10 +1,14 @@
 """Serving engine: prefill + single-token decode over the model zoo's
 cache pytrees (KV / MLA-latent / SSM-state / SWA-ring), greedy or
-temperature sampling, and a slot-based continuous batcher.
+temperature sampling, and a slot-based continuous batcher with
+**chunked prefill** (admission costs ceil(S/chunk) jitted steps, the
+decode tick is one jitted step over all slots).
 
 ``make_prefill_step`` / ``make_decode_step`` are the functions the
 multi-pod dry-run lowers for the ``prefill_32k`` / ``decode_32k`` /
-``long_500k`` input shapes.
+``long_500k`` input shapes; ``make_engine_step`` is the single
+masked-slot step function behind ``ServingEngine`` (chunked prefill and
+decode tick are the same callable at two shapes).
 """
 from __future__ import annotations
 
@@ -15,8 +19,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.models.config import ModelConfig
-from repro.models.transformer import forward, init_cache
+from repro.models.config import ATTN, ModelConfig
+from repro.models.transformer import forward, init_cache, unembed
 
 Array = jax.Array
 
@@ -31,19 +35,41 @@ def make_prefill_step(cfg: ModelConfig, *, kv_chunk: int = 1024) -> Callable:
     return prefill_step
 
 
-def make_decode_step(cfg: ModelConfig, *, kv_chunk: int = 1024,
-                     masked_slots: bool = False) -> Callable:
+def make_decode_step(cfg: ModelConfig, *, kv_chunk: int = 1024) -> Callable:
     """(params, caches, tokens (B,1) | embeds, positions (B,1)) ->
     (logits (B,1,V), caches).  One new token against the running cache.
-    ``masked_slots=True`` makes rows with position -1 cache/state no-ops
-    (continuous-batching idle slots)."""
+    (Continuous batching goes through ``make_engine_step`` instead, whose
+    masked-slot semantics are the tested path.)"""
     def decode_step(params, caches, batch, positions):
         logits, _, caches = forward(params, cfg, batch, caches=caches,
                                     positions=positions, decode=True,
-                                    kv_chunk=kv_chunk,
-                                    masked_slots=masked_slots)
+                                    kv_chunk=kv_chunk)
         return logits, caches
     return decode_step
+
+
+def make_engine_step(cfg: ModelConfig, *, kv_chunk: int = 1024) -> Callable:
+    """(params, caches, tokens (B,S), positions (B,S)) ->
+    (greedy next-token ids (B,1) int32, caches).
+
+    The one step function behind the continuous batcher: the SAME jitted
+    callable serves chunked prefill (S = chunk) and the batched decode
+    tick (S = 1, which statically selects the single-token cache paths —
+    absorbed MLA etc.).  Rows/entries with position -1 are cache/state
+    no-ops, so idle slots ride along for free.  Only the LAST position is
+    unembedded (the engine never consumes mid-chunk logits) and greedy
+    argmax happens inside the jit, so one (slots, vocab) matmul and
+    (B, 1) token ids are all that leave the step, never (B, S, V) logits.
+    """
+    def engine_step(params, caches, tokens, positions):
+        h, _, caches = forward(params, cfg, {"tokens": tokens},
+                               caches=caches, positions=positions,
+                               decode=tokens.shape[1] == 1,
+                               kv_chunk=kv_chunk, compute_logits=False,
+                               masked_slots=True)
+        logits = unembed(params, cfg, h[:, -1:, :])
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+    return engine_step
 
 
 def sample(logits: Array, key, temperature: float = 0.0) -> Array:
@@ -96,66 +122,136 @@ class Request:
     done: bool = False
 
 
+def _clear_slot(caches, s):
+    """Zero one slot's cache/state across every cache kind (KV /
+    MLA-latent / SSM-state / SWA-ring) and invalidate its positions.
+
+    Slot is ALWAYS the first axis after the structural prefix: prefix
+    caches are (slots, ...); stack caches carry one leading ``n_periods``
+    axis, i.e. (periods, slots, ...).  Deciding on the pytree path (not
+    on shape coincidences like ``shape[0] != slots``) keeps the reset
+    correct when n_periods happens to equal the slot count."""
+    def clear(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        top = str(getattr(path[0], "key", path[0]))
+        bdim = 1 if top == "stack" else 0
+        if leaf.ndim <= bdim:            # defensive: scalar/period-only leaf
+            return leaf
+        idx = (slice(None),) * bdim + (s,)
+        fill = -1 if name == "pos" else 0
+        return leaf.at[idx].set(jnp.asarray(fill, leaf.dtype))
+    return jax.tree_util.tree_map_with_path(clear, caches)
+
+
 class ServingEngine:
-    """Fixed-slot continuous batching: requests occupy slots; every engine
-    tick decodes one token for all active slots; finished slots are
-    refilled from the queue.  Per-slot positions keep the shared batched
-    cache consistent; idle slots step with position -1, which every cache
-    kind treats as a masked no-op for attention purposes."""
+    """Fixed-slot continuous batching with **chunked prefill**.
+
+    Requests occupy slots; admission runs the new request's prompt through
+    the shared slot cache in ``ceil(S_prompt / chunk)`` batched forward
+    steps (other slots masked with position -1) instead of S single-token
+    decode calls; every engine tick then decodes one token for all active
+    slots in a single jitted step over the stacked slot state.  Finished
+    slots are recycled through a cache-clearing reset so no KV entries or
+    recurrent state leak into the next occupant.
+
+    Per-slot positions keep the shared batched cache consistent; idle
+    slots step with position -1, which every cache kind treats as a
+    write/state no-op.  Cache buffers are donated to the jitted step on
+    accelerator backends so the slot cache is updated in place.
+
+    ``stats`` counts jitted forward calls (``prefill_calls`` /
+    ``decode_calls``) — the admission cost of an S-token prompt is
+    ``ceil(S/chunk)`` calls, which tests and benchmarks rely on.
+    """
 
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
-                 cache_len: int = 512):
+                 cache_len: int = 512, chunk: int = 32):
         self.params = params
         self.cfg = cfg
         self.slots = slots
         self.cache_len = cache_len
+        self.chunk = max(1, min(chunk, cache_len))
+        # full (non-windowed) attention layers must never wrap the ring:
+        # every position of prompt + generation needs a live cache entry.
+        # SWA rings may wrap freely — chunked prefill attends over
+        # [pre-write ring ∥ chunk], so eviction never loses in-window keys.
+        specs = tuple(cfg.prefix_layers) + tuple(cfg.period)
+        self._bounded_ctx = any(s.mixer == ATTN for s in specs)
         self.caches = init_cache(cfg, slots, cache_len)
-        self._decode = jax.jit(make_decode_step(cfg, masked_slots=True))
+        # buffer donation is a no-op on CPU and would only warn
+        donate = jax.default_backend() != "cpu"
+        self._step_fn = jax.jit(make_engine_step(cfg),
+                                donate_argnums=(1,) if donate else ())
+        self._reset_fn = jax.jit(_clear_slot,
+                                 donate_argnums=(0,) if donate else ())
         self.active: List[Optional[Request]] = [None] * slots
         self.positions = [0] * slots
         self.queue: List[Request] = []
         self.finished: List[Request] = []
+        self.stats = {"prefill_calls": 0, "decode_calls": 0, "admitted": 0}
 
     def submit(self, req: Request) -> None:
+        if not req.prompt:
+            raise ValueError(
+                f"ServingEngine: request {req.req_id} has an empty prompt — "
+                f"at least one prompt token is required to seed decoding")
+        if self._bounded_ctx and len(req.prompt) + req.max_new > self.cache_len:
+            # only full-attention caches bound the context: SWA rings wrap
+            # exactly under the window mask, recurrent state has no length
+            raise ValueError(
+                f"ServingEngine: request {req.req_id} needs "
+                f"{len(req.prompt)} prompt + {req.max_new} new tokens but "
+                f"cache_len={self.cache_len}; full-attention caches must "
+                f"not wrap (raise cache_len or lower max_new)")
         self.queue.append(req)
 
-    def _step(self, toks, pos):
-        return self._decode(self.params, self.caches,
-                            {"tokens": toks}, pos)
-
-    def _reset_slot(self, s: int) -> None:
-        """Clear one slot's cache/state before reuse — stale KV entries
-        (valid positions from the previous occupant) and carried SSM
-        states would otherwise leak into the next request."""
-        def clear(path, leaf):
-            name = str(getattr(path[-1], "key", path[-1]))
-            bdim = 1 if "stack" in str(path[0:1]) or leaf.ndim == 0 else 0
-            # stack-period caches carry a leading period axis
-            bdim = 1 if leaf.ndim >= 2 and leaf.shape[0] != self.slots else 0
-            idx = (slice(None),) * bdim + (s,)
-            fill = -1 if name == "pos" else 0
-            return leaf.at[idx].set(jnp.asarray(fill, leaf.dtype))
-        self.caches = jax.tree_util.tree_map_with_path(clear, self.caches)
+    def warmup(self) -> None:
+        """Compile the two engine shapes ahead of serving: the chunked-
+        prefill step (slots, chunk) and the decode tick (slots, 1).  Runs
+        them with every position masked (-1), which is a cache no-op, so
+        warmup never perturbs engine state."""
+        for C in sorted({self.chunk, 1}):
+            toks = jnp.zeros((self.slots, C), jnp.int32)
+            pos = jnp.full((self.slots, C), -1, jnp.int32)
+            _, self.caches = self._step_fn(self.params, self.caches,
+                                           toks, pos)
+        # compile the reset against a FREE slot only (resetting it is
+        # harmless — admission resets again); never touch a live one
+        free = [s for s in range(self.slots) if self.active[s] is None]
+        if free:
+            self.caches = self._reset_fn(self.caches, free[-1])
+        jax.block_until_ready(self.caches)
 
     def _admit(self) -> None:
-        """Token-level admission: walk the prompt through the slot's cache
-        one token per step (other slots masked with position -1)."""
+        """Chunked-prefill admission: reset the slot's cache, then walk the
+        prompt through it ``chunk`` tokens per jitted step (other slots
+        masked with position -1).  The final chunk may be shorter — it
+        compiles once per distinct remainder length."""
         for s in range(self.slots):
             if self.active[s] is None and self.queue:
                 req = self.queue.pop(0)
                 self.active[s] = req
-                self._reset_slot(s)
-                logits = None
-                for t, tok in enumerate(req.prompt):
-                    toks = jnp.zeros((self.slots, 1), jnp.int32).at[s, 0].set(tok)
-                    pos = jnp.full((self.slots, 1), -1, jnp.int32).at[s, 0].set(t)
-                    logits, self.caches = self._step(toks, pos)
-                self.positions[s] = len(req.prompt)
-                req.pending = int(jnp.argmax(logits[s, -1]))
+                self.caches = self._reset_fn(self.caches, s)
+                prompt = jnp.asarray(req.prompt, jnp.int32)
+                S = int(prompt.shape[0])
+                nxt = None
+                for c0 in range(0, S, self.chunk):
+                    piece = prompt[c0:c0 + self.chunk]
+                    C = int(piece.shape[0])
+                    toks = jnp.zeros((self.slots, C), jnp.int32).at[s].set(piece)
+                    pos = jnp.full((self.slots, C), -1, jnp.int32).at[s].set(
+                        jnp.arange(c0, c0 + C, dtype=jnp.int32))
+                    nxt, self.caches = self._step_fn(self.params, self.caches,
+                                                     toks, pos)
+                    self.stats["prefill_calls"] += 1
+                self.positions[s] = S
+                req.pending = int(nxt[s, -1])
+                self.stats["admitted"] += 1
 
     def tick(self) -> int:
         """One engine iteration: feed each active slot's pending token,
-        emit it, and compute the next.  Returns #active slots."""
+        emit it, and compute the next — a single jitted decode step over
+        all slots.  Returns #active slots."""
         self._admit()
         act = [s for s in range(self.slots) if self.active[s] is not None]
         if not act:
@@ -165,11 +261,12 @@ class ServingEngine:
         for s in act:
             toks = toks.at[s, 0].set(self.active[s].pending)
             pos = pos.at[s, 0].set(self.positions[s])
-        logits, self.caches = self._step(toks, pos)
+        nxt, self.caches = self._step_fn(self.params, self.caches, toks, pos)
+        self.stats["decode_calls"] += 1
         for s in act:
             req = self.active[s]
             req.generated.append(req.pending)
-            req.pending = int(jnp.argmax(logits[s, -1]))
+            req.pending = int(nxt[s, 0])
             self.positions[s] += 1
             if len(req.generated) >= req.max_new:
                 req.done = True

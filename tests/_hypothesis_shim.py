@@ -1,0 +1,71 @@
+"""Tiny deterministic stand-in for ``hypothesis`` so the property tests
+in ``test_core.py`` still collect and run on a bare environment.
+
+Only the surface used by the test suite is implemented: ``given`` over
+positional strategies, ``settings(max_examples=..., deadline=...)`` and
+the ``st.integers`` / ``st.floats`` / ``st.lists`` strategies.  Each
+example draws from a seeded ``numpy.random.RandomState`` so failures
+reproduce exactly; install real ``hypothesis`` (requirements-dev.txt)
+for shrinking and broader search.
+"""
+from __future__ import annotations
+
+
+import types
+
+import numpy as np
+
+# keep bare-env runs quick; real hypothesis honours the full request
+_MAX_EXAMPLES_CAP = 15
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def _integers(lo: int, hi: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.randint(lo, hi + 1)))
+
+
+def _floats(lo: float, hi: float) -> _Strategy:
+    return _Strategy(lambda rng: float(rng.uniform(lo, hi)))
+
+
+def _lists(elem: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    return _Strategy(lambda rng: [
+        elem.draw(rng) for _ in range(int(rng.randint(min_size, max_size + 1)))])
+
+
+st = types.SimpleNamespace(integers=_integers, floats=_floats, lists=_lists)
+
+
+def settings(max_examples: int = 20, **_ignored):
+    """Records the example budget on the wrapped function."""
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        # zero-arg wrapper WITHOUT functools.wraps: pytest must not see the
+        # wrapped function's parameters (it would resolve them as fixtures)
+        def run():
+            n = getattr(run, "_max_examples", None) \
+                or getattr(fn, "_max_examples", 20)
+            for i in range(min(n, _MAX_EXAMPLES_CAP)):
+                rng = np.random.RandomState(i)
+                drawn = [s.draw(rng) for s in strategies]
+                try:
+                    fn(*drawn)
+                except Exception as e:  # noqa: BLE001 — annotate the example
+                    raise AssertionError(
+                        f"falsifying example (shim, seed={i}): {drawn!r}"
+                    ) from e
+        run.__name__ = fn.__name__
+        run.__doc__ = fn.__doc__
+        run.__module__ = fn.__module__
+        return run
+    return deco

@@ -6,7 +6,11 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare env: deterministic fallback, see the shim
+    from _hypothesis_shim import given, settings, st
 
 from repro.configs import get_config, get_smoke_config
 from repro.core.broker import Broker

@@ -115,3 +115,20 @@ def test_spmd_pipeline_subprocess():
     r = subprocess.run([sys.executable, "-c", PIPELINE_SCRIPT], env=env,
                        capture_output=True, text=True, timeout=600)
     assert "SPMD_PIPELINE_OK" in r.stdout, r.stderr[-2000:]
+
+
+def test_bus_recv_missing_key_is_descriptive():
+    """A mis-scheduled DAG cut must fail with (dst, key, available keys),
+    not a bare KeyError."""
+    bus = Bus()
+    bus.send(0, 1, "fp/attn_3", jnp.ones((2, 2)))
+    with pytest.raises(KeyError) as ei:
+        bus.recv(1, "fp/ffn_9")
+    msg = str(ei.value)
+    assert "fp/ffn_9" in msg and "dst=1" in msg and "fp/attn_3" in msg
+    with pytest.raises(KeyError) as ei:
+        bus.recv(7, "fp/attn_3")          # empty mailbox entirely
+    assert "dst=7" in str(ei.value) and "[]" in str(ei.value)
+    # the good path still works
+    np.testing.assert_array_equal(np.asarray(bus.recv(1, "fp/attn_3")),
+                                  np.ones((2, 2)))
