@@ -101,6 +101,69 @@ def engine_bench() -> List[dict]:
     rows.append({"name": f"engine/tick_{slots}slots",
                  "us_per_call": us_tick,
                  "derived": f"{us_tick / slots:.0f}us_per_slot_token"})
+    rows.extend(paged_engine_bench(params, cfg))
+    return rows
+
+
+def paged_engine_bench(params, cfg) -> List[dict]:
+    """Paged-vs-dense at EQUAL cache memory under heterogeneous prompt
+    lengths: the dense engine spends one worst-case ``cache_len`` per
+    slot, the paged engine spends per-request pages from a shared pool —
+    so at the same byte budget it runs strictly more requests
+    concurrently.  Also times admit + decode tick on the paged path
+    (gather/scatter overhead vs the dense ring write)."""
+    from repro.serve.engine import Request, ServingEngine
+
+    cache_len, page = 64, 8
+    long_p = list(range(1, 49))           # 48 prompt + 16 new = worst case
+    short_p = [7, 8, 9]                   # 3 prompt + 8 new = 2 pages
+    reqs = [(long_p, 16)] + [(short_p, 8)] * 6
+
+    def drive(paged: bool, slots: int):
+        eng = ServingEngine(params, cfg, slots=slots, cache_len=cache_len,
+                            chunk=16, paged=paged, page_size=page,
+                            num_blocks=(3 * cache_len) // page if paged
+                            else None)
+        eng.warmup()
+        for i, (p, mn) in enumerate(reqs):
+            eng.submit(Request(i, p, max_new=mn))
+        peak, ticks = 0, 0
+        t0 = time.perf_counter()
+        while True:
+            n = eng.tick()
+            if not n and not eng.queue:
+                break
+            peak, ticks = max(peak, n), ticks + 1
+        jax.block_until_ready(eng.caches)
+        return peak, ticks, (time.perf_counter() - t0) * 1e6
+
+    # equal memory: dense 3 slots x 64 entries == paged 24 pages x 8
+    d_peak, d_ticks, d_us = drive(False, 3)
+    p_peak, p_ticks, p_us = drive(True, 7)
+    rows = [{"name": "engine/paged_concurrency_equal_mem",
+             "us_per_call": p_us / max(1, p_ticks),
+             "derived": f"peak{p_peak}vs{d_peak}_ticks{p_ticks}vs{d_ticks}"
+                        f"_dense{d_us / max(1, d_ticks):.0f}us"}]
+    assert p_peak > d_peak, (p_peak, d_peak)
+
+    # paged step overhead at matched occupancy (4 slots, same prompts)
+    for paged in (False, True):
+        eng = ServingEngine(params, cfg, slots=4, cache_len=cache_len,
+                            chunk=16, paged=paged, page_size=page)
+        eng.warmup()
+        for i in range(4):
+            eng.submit(Request(i, long_p[: 8 + i], max_new=48))
+        eng.tick()
+        n = 20
+        t0 = time.perf_counter()
+        for _ in range(n):
+            eng.tick()
+        jax.block_until_ready(eng.caches)
+        us = (time.perf_counter() - t0) / n * 1e6
+        rows.append({"name": f"engine/tick_4slots_"
+                             f"{'paged' if paged else 'dense'}",
+                     "us_per_call": us,
+                     "derived": f"page{page}" if paged else "ring"})
     return rows
 
 

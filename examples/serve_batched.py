@@ -4,6 +4,13 @@ architecture (including the hybrid/SSM ones, whose decode uses recurrent
 state).  Admission costs ceil(S/chunk) jitted steps per prompt; the
 decode tick is one jitted step for all slots.
 
+By default the KV cache is **paged** (``--no-paged`` for the dense
+per-slot rings): each request takes ceil((prompt + max_new) / page_size)
+pages from a shared ``--num-blocks`` pool through a block table, so
+short and long requests stop sharing one worst-case cache_len and the
+queue backpressures (instead of crashing) when the pool is full.  The
+example asserts paged and dense decode are token-identical.
+
     PYTHONPATH=src python examples/serve_batched.py --arch rwkv6-7b
 """
 import argparse
@@ -16,18 +23,11 @@ from repro.models.transformer import init_params
 from repro.serve.engine import Request, ServingEngine, generate
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=list(ALL_ARCHS), default="rwkv6-7b")
-    ap.add_argument("--slots", type=int, default=3)
-    ap.add_argument("--chunk", type=int, default=4)
-    args = ap.parse_args()
-
-    cfg = get_smoke_config(args.arch)
-    params = init_params(jax.random.PRNGKey(0), cfg)
+def serve(params, cfg, args, paged: bool):
     engine = ServingEngine(params, cfg, slots=args.slots, cache_len=96,
-                           chunk=args.chunk)
-
+                           chunk=args.chunk, paged=paged,
+                           page_size=args.page_size,
+                           num_blocks=args.num_blocks or None)
     # first wave
     for i in range(4):
         engine.submit(Request(i, [1 + i, 2, 3], max_new=6))
@@ -37,17 +37,47 @@ def main():
         if ticks == 3:   # late arrivals join running batch
             engine.submit(Request(100, [7, 8, 9, 10], max_new=5))
             engine.submit(Request(101, [7, 8, 9, 10], max_new=5))
+    return engine, ticks
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ALL_ARCHS), default="rwkv6-7b")
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--chunk", type=int, default=4)
+    ap.add_argument("--paged", dest="paged", action="store_true",
+                    default=True, help="block-table KV cache (default)")
+    ap.add_argument("--no-paged", dest="paged", action="store_false",
+                    help="dense per-slot ring caches only")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="0 = same memory as the dense cache")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    engine, ticks = serve(params, cfg, args, paged=args.paged)
     done = sorted(engine.finished, key=lambda r: r.req_id)
     st = engine.stats
-    print(f"{cfg.name}: {len(done)} requests over {ticks} engine ticks")
+    mode = (f"paged pool {engine.num_blocks}x{engine.page_size}"
+            if engine.paged else "dense rings")
+    print(f"{cfg.name}: {len(done)} requests over {ticks} engine ticks "
+          f"({mode})")
     print(f"  {st['prefill_calls']} chunked-prefill steps (chunk="
           f"{engine.chunk}) + {st['decode_calls']} decode steps for "
-          f"{st['admitted']} admissions")
+          f"{st['admitted']} admissions, {st['backpressure']} backpressure")
     for r in done:
         print(f"  req{r.req_id:3d} prompt={r.prompt} -> {r.generated}")
     # admission cost is ceil(S/chunk) steps per prompt, never S
     expected = sum(math.ceil(len(r.prompt) / engine.chunk) for r in done)
     assert st["prefill_calls"] == expected, (st["prefill_calls"], expected)
+    if cfg.n_experts:
+        # MoE capacity-factor dropping couples slots through the shared
+        # per-batch expert budget (ROADMAP "MoE chunked-prefill parity"),
+        # so same-prompt equality and generate() parity don't hold here
+        print("MoE arch: slot-isolation/parity self-checks skipped "
+              "(capacity dropping is batch-coupled)")
+        return
     # same-prompt requests must decode identically (slot isolation)
     assert done[-1].generated == done[-2].generated
     ref = generate(params, cfg,
@@ -55,6 +85,11 @@ def main():
                    max_new=5)[0, 4:].tolist()
     assert done[-1].generated == ref, (done[-1].generated, ref)
     print("late-arrival decode == fresh generate() ✓")
+    if args.paged:
+        other, _ = serve(params, cfg, args, paged=False)
+        dense = sorted(other.finished, key=lambda r: r.req_id)
+        assert [r.generated for r in done] == [r.generated for r in dense]
+        print("paged decode == dense decode ✓")
 
 
 if __name__ == "__main__":

@@ -36,16 +36,22 @@ from repro.launch.shardings import (batch_specs, cache_specs,
 from repro.launch.specs import input_specs
 from repro.models.hints import wrap_with_hints
 from repro.optim.adamw import adamw
-from repro.serve.engine import make_decode_step, make_prefill_step
+from repro.serve.engine import (make_decode_step, make_engine_step,
+                                make_prefill_step)
 from repro.train.step import make_train_step
 
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 
 def build_jitted(arch: str, shape_name: str, mesh, *, microbatches: int = 1,
-                 kv_chunk: int = 1024):
-    """Returns (jitted_fn, ordered_args_sds)."""
-    spec = input_specs(arch, shape_name)
+                 kv_chunk: int = 1024, paged: bool = False,
+                 page_size: int = 16):
+    """Returns (jitted_fn, ordered_args_sds).  ``paged=True`` lowers the
+    continuous-batching ENGINE step for decode shapes — paged block-pool
+    caches, block table and per-slot sampling operands included — instead
+    of the plain dense decode step."""
+    paged = paged and INPUT_SHAPES[shape_name].kind == "decode"
+    spec = input_specs(arch, shape_name, paged=paged, page_size=page_size)
     cfg, shape = spec["cfg"], spec["shape"]
     p_specs = param_specs(spec["params"], mesh)
     p_sh = to_shardings(p_specs, mesh, spec["params"])
@@ -90,33 +96,60 @@ def build_jitted(arch: str, shape_name: str, mesh, *, microbatches: int = 1,
                             spec["batch"])
         pos_sh = to_shardings(batch_specs({"p": spec["positions"]}, mesh,
                                           shard_batch=shard_b), mesh)["p"]
-        fn = (make_prefill_step(cfg, kv_chunk=kv_chunk) if shape.kind == "prefill"
-              else make_decode_step(cfg, kv_chunk=kv_chunk))
+        if paged:
+            # the serving-engine step itself: paged pools + block table +
+            # in-jit per-slot sampling.  Tokens arrive as a raw (B, 1)
+            # array (the engine step has no batch dict).
+            fn = make_engine_step(cfg, kv_chunk=kv_chunk, paged=True)
+        else:
+            fn = (make_prefill_step(cfg, kv_chunk=kv_chunk)
+                  if shape.kind == "prefill"
+                  else make_decode_step(cfg, kv_chunk=kv_chunk))
         fn = wrap_with_hints(fn, mesh, hint_rule,
                              moe_groups=1 if decode_tp else moe_groups,
                              moe_ep=(not decode_tp and os.environ.get(
                                  "REPRO_MOE_EP", "1") == "1"))
-        jitted = jax.jit(fn,
-                         in_shardings=(p_sh, c_sh, b_sh, pos_sh),
-                         out_shardings=(None, c_sh))
-        args = (spec["params"], spec["caches"], spec["batch"],
-                spec["positions"])
+        if paged:
+            toks = spec["batch"]["tokens"]
+            tok_sh = to_shardings(batch_specs({"t": toks}, mesh,
+                                              shard_batch=shard_b), mesh)["t"]
+            tab_sh = to_shardings(batch_specs({"t": spec["table"]}, mesh,
+                                              shard_batch=shard_b), mesh)["t"]
+            rep = NamedSharding(mesh, P())
+            jitted = jax.jit(fn,
+                             in_shardings=(p_sh, c_sh, tok_sh, pos_sh,
+                                           tab_sh, rep, rep, rep),
+                             out_shardings=(None, c_sh))
+            sm = spec["sampling"]
+            args = (spec["params"], spec["caches"], toks, spec["positions"],
+                    spec["table"], sm["rng_keys"], sm["temperature"],
+                    sm["top_p"])
+        else:
+            jitted = jax.jit(fn,
+                             in_shardings=(p_sh, c_sh, b_sh, pos_sh),
+                             out_shardings=(None, c_sh))
+            args = (spec["params"], spec["caches"], spec["batch"],
+                    spec["positions"])
     return jitted, args, cfg, shape
 
 
 def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             out_dir: Optional[str] = None, verbose: bool = True,
-            microbatches: int = 1, kv_chunk: int = 1024) -> Dict:
+            microbatches: int = 1, kv_chunk: int = 1024,
+            paged: bool = False, page_size: int = 16) -> Dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
     chips = mesh.devices.size
     t0 = time.time()
+    # build_jitted downgrades paged for non-decode shapes; record what is
+    # actually lowered, not what was requested
+    paged = paged and INPUT_SHAPES[shape_name].kind == "decode"
     rec: Dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
-                 "chips": chips, "status": "ok"}
+                 "chips": chips, "status": "ok", "paged": bool(paged)}
     try:
         jitted, args, cfg, shape = build_jitted(
             arch, shape_name, mesh, microbatches=microbatches,
-            kv_chunk=kv_chunk)
+            kv_chunk=kv_chunk, paged=paged, page_size=page_size)
         lowered = jitted.lower(*args)
         t_lower = time.time() - t0
         compiled = lowered.compile()
@@ -124,6 +157,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
 
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):   # some jax versions wrap it
+            cost = cost[0] if cost else {}
         print_mem = {
             k: getattr(mem, k, None) for k in
             ("argument_size_in_bytes", "output_size_in_bytes",
@@ -204,13 +239,18 @@ def main():
                     help="run every applicable (arch × shape) pair")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--paged", action="store_true",
+                    help="decode shapes: lower the paged (block-table) "
+                         "serving-engine step instead of the dense decode")
+    ap.add_argument("--page-size", type=int, default=16)
     args = ap.parse_args()
 
     if args.all:
         pairs, skips = baseline_pairs()
         for arch, shape in pairs:
             run_one(arch, shape, multi_pod=args.multi_pod, out_dir=args.out,
-                    microbatches=args.microbatches)
+                    microbatches=args.microbatches, paged=args.paged,
+                    page_size=args.page_size)
         for arch, shape, why in skips:
             print(f"[skip] {arch} × {shape}: {why}")
         return
@@ -221,7 +261,8 @@ def main():
         print(f"[skip] {args.arch} × {args.shape}: {why}")
         return
     run_one(args.arch, args.shape, multi_pod=args.multi_pod,
-            out_dir=args.out, microbatches=args.microbatches)
+            out_dir=args.out, microbatches=args.microbatches,
+            paged=args.paged, page_size=args.page_size)
 
 
 if __name__ == "__main__":

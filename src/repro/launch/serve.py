@@ -6,8 +6,16 @@ prefill step ``(slots, chunk)`` and the decode tick ``(slots, 1)``;
 ``--warmup`` compiles both ahead of traffic and reports the compile time
 separately from serving throughput.
 
+``--paged`` (default on) stores KV through a block table: per-request
+cache memory is ceil((prompt + max_new) / page_size) pages from a shared
+``--num-blocks`` pool instead of one worst-case ``cache_len`` per slot,
+and the queue backpressures when the pool is exhausted.  ``--no-paged``
+selects the dense per-slot ring caches (bitwise reference semantics).
+``--temperature``/``--top-p`` sample in-jit with per-slot PRNG streams
+(temperature 0 = greedy, bitwise-stable).
+
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b \
-        --requests 8 --max-new 16 --slots 4 --chunk 16
+        --requests 8 --max-new 16 --slots 4 --chunk 16 --page-size 16
 """
 from __future__ import annotations
 
@@ -31,6 +39,21 @@ def main():
     ap.add_argument("--chunk", type=int, default=16,
                     help="prefill chunk: admission costs ceil(S/chunk) "
                          "jitted steps instead of S")
+    ap.add_argument("--paged", dest="paged", action="store_true",
+                    default=True,
+                    help="block-table KV cache: per-request pages from a "
+                         "shared pool (default)")
+    ap.add_argument("--no-paged", dest="paged", action="store_false",
+                    help="dense per-slot ring caches (reference semantics)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="positions per cache page (paged mode)")
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="pool size in pages; 0 = same memory as the dense "
+                         "cache (slots * cache_len / page_size)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-request sampling temperature (0 = greedy)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (with --temperature > 0)")
     ap.add_argument("--no-warmup", action="store_true",
                     help="skip ahead-of-traffic compilation of the two "
                          "engine shapes")
@@ -40,7 +63,10 @@ def main():
     cfg = get_smoke_config(args.arch)
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
     engine = ServingEngine(params, cfg, slots=args.slots,
-                           cache_len=args.cache_len, chunk=args.chunk)
+                           cache_len=args.cache_len, chunk=args.chunk,
+                           paged=args.paged, page_size=args.page_size,
+                           num_blocks=args.num_blocks or None,
+                           seed=args.seed)
     if not args.no_warmup:
         t0 = time.time()
         engine.warmup()
@@ -51,17 +77,21 @@ def main():
         key, sub = jax.random.split(key)
         prompt = jax.random.randint(sub, (4 + i % 4,), 0,
                                     cfg.vocab_size).tolist()
-        engine.submit(Request(i, prompt, max_new=args.max_new))
+        engine.submit(Request(i, prompt, max_new=args.max_new,
+                              temperature=args.temperature,
+                              top_p=args.top_p))
     t0 = time.time()
     done = engine.run()
     dt = time.time() - t0
     toks = sum(len(r.generated) for r in done)
     st = engine.stats
+    mode = (f"paged:{engine.num_blocks}x{engine.page_size}"
+            if engine.paged else "dense")
     print(f"{cfg.name}: served {len(done)} requests, {toks} tokens in "
-          f"{dt:.2f}s ({toks/dt:.1f} tok/s, slots={args.slots})")
+          f"{dt:.2f}s ({toks/dt:.1f} tok/s, slots={args.slots}, {mode})")
     print(f"  engine calls: {st['prefill_calls']} prefill (chunk="
           f"{engine.chunk}) + {st['decode_calls']} decode ticks, "
-          f"{st['admitted']} admissions")
+          f"{st['admitted']} admissions, {st['backpressure']} backpressure")
     for r in sorted(done, key=lambda r: r.req_id)[:4]:
         print(f"  req{r.req_id}: prompt={r.prompt} -> {r.generated}")
 

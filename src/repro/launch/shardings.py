@@ -135,7 +135,13 @@ def cache_leaf_spec(name: str, *, long_ctx: bool, dp, mp,
     KV caches prefer sharding kv-heads on ``model``; when the head count
     doesn\'t divide the axis (e.g. 8 heads on 16 ranks) they shard head_dim
     instead — otherwise GSPMD re-shards internally and pays a full-cache
-    gather at every pinned cache update."""
+    gather at every pinned cache update.
+
+    The same name-keyed rules cover PAGED pools (k/v: (N, page, Hkv, hd),
+    pos: (N, page), ckv/krope: (N, page, kr|dr)): ranks match the dense
+    layouts with the block axis standing in for batch, so blocks shard on
+    ``data`` and heads/latent on ``model`` — block-table gathers then move
+    pages over data, which the dry-run compiles as the paging a2a cost."""
     dps = dp if len(dp) > 1 else dp[0]
     bspec = None if long_ctx else dps
     seq = dps if long_ctx else None

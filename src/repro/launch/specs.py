@@ -45,21 +45,41 @@ def opt_state_sds(cfg: ModelConfig, optimizer=None):
     return jax.eval_shape(opt.init, p)
 
 
-def caches_sds(cfg: ModelConfig, batch: int, cache_len: int):
+def caches_sds(cfg: ModelConfig, batch: int, cache_len: int, *,
+               paged: bool = False, page_size: int = 16):
     return jax.eval_shape(
-        lambda: init_cache(cfg, batch, cache_len))
+        lambda: init_cache(cfg, batch, cache_len, paged=paged,
+                           page_size=page_size))
 
 
 def positions_sds(batch: int, seq: int):
     return SDS((batch, seq), jnp.int32)
 
 
-def input_specs(arch: str, shape_name: str) -> Dict:
+def block_table_sds(batch: int, cache_len: int, page_size: int):
+    """(slots, n_cols) int32 block table for the paged engine step."""
+    return SDS((batch, max(1, -(-cache_len // page_size))), jnp.int32)
+
+
+def sampling_sds(batch: int) -> Dict:
+    """Per-slot sampling operands of the engine step: counter-based PRNG
+    key data plus temperature / top-p vectors."""
+    return {"rng_keys": SDS((batch, 2), jnp.uint32),
+            "temperature": SDS((batch,), jnp.float32),
+            "top_p": SDS((batch,), jnp.float32)}
+
+
+def input_specs(arch: str, shape_name: str, *, paged: bool = False,
+                page_size: int = 16) -> Dict:
     """All dry-run inputs for one (architecture, input-shape) pair.
 
     train  -> {params, opt_state, batch}
     prefill-> {params, caches, batch, positions}
     decode -> {params, caches, batch, positions}  (batch = one token)
+
+    ``paged=True`` (decode only) swaps the dense caches for block pools
+    and adds the engine-step operands: ``table`` plus the per-slot
+    sampling vectors (see ``repro.serve.engine.make_engine_step``).
     """
     cfg = get_config(arch)
     shape = INPUT_SHAPES[shape_name]
@@ -73,7 +93,11 @@ def input_specs(arch: str, shape_name: str) -> Dict:
         out["batch"] = batch_sds(cfg, B, S, kind="prefill")
         out["positions"] = positions_sds(B, S)
     else:  # decode: one new token against a seq_len cache
-        out["caches"] = caches_sds(cfg, B, S)
+        out["caches"] = caches_sds(cfg, B, S, paged=paged,
+                                   page_size=page_size)
         out["batch"] = batch_sds(cfg, B, 1, kind="decode")
         out["positions"] = positions_sds(B, 1)
+        if paged:
+            out["table"] = block_table_sds(B, S, page_size)
+            out["sampling"] = sampling_sds(B)
     return out

@@ -87,7 +87,8 @@ def attention(q: Array, k: Array, v: Array, q_pos: Array, kv_pos: Array, *,
               window: int = 0, causal: bool = True, softcap: float = 0.0,
               kv_chunk: int = 1024, scale: Optional[float] = None,
               q_extra: Optional[Array] = None,
-              k_extra: Optional[Array] = None) -> Array:
+              k_extra: Optional[Array] = None,
+              table: Optional[Array] = None) -> Array:
     """Flash-style attention.
 
     q: (B, S, Hq, D); k: (B, T, Hkv, D); v: (B, T, Hkv, Dv) (Dv may differ,
@@ -100,10 +101,21 @@ def attention(q: Array, k: Array, v: Array, q_pos: Array, kv_pos: Array, *,
     latent and rope caches separate this way instead of concatenating
     differently-sharded tensors (dot distributes over concat, so the math
     is identical).
+
+    Paged mode (``table`` given): k / v / kv_pos (and k_extra) are block
+    POOLS of shape (num_blocks, page, Hkv, D*) / (num_blocks, page) and
+    ``table`` is a (B, n_cols) int32 block table mapping each row's
+    logical page to a pool block; entries < 0 are unallocated pages
+    (fully masked).  Each online-softmax step gathers one chunk of blocks
+    from the pool, so peak activation memory stays O(B * kv_chunk)
+    regardless of pool size, and the masking/accumulation math is
+    identical to the dense path — unallocated or unwritten entries carry
+    position -1 and contribute exactly-zero probability mass.
+
     Returns (B, S, Hq, Dv) in q.dtype; accumulation in float32.
     """
     B, S, Hq, D = q.shape
-    T, Hkv = k.shape[1], k.shape[2]
+    Hkv = k.shape[2]
     Dv = v.shape[-1]
     assert Hq % Hkv == 0, (Hq, Hkv)
     G = Hq // Hkv
@@ -115,30 +127,60 @@ def attention(q: Array, k: Array, v: Array, q_pos: Array, kv_pos: Array, *,
         De = q_extra.shape[-1]
         qe = q_extra.astype(jnp.float32).reshape(B, S, Hkv, G, De) * scale
 
-    C = min(kv_chunk, T)
-    n_chunks = -(-T // C)
-    pad = n_chunks * C - T
-    if pad:
-        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
-        if k_extra is not None:
-            k_extra = jnp.pad(k_extra, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    if table is None:
+        T = k.shape[1]
+        C = min(kv_chunk, T)
+        n_chunks = -(-T // C)
+        pad = n_chunks * C - T
+        if pad:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+            if k_extra is not None:
+                k_extra = jnp.pad(k_extra, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+        def chunk_at(idx):
+            # k/v stay loop-invariant (no transposed copy of the cache);
+            # each step dynamic-slices one chunk.
+            kj = jax.lax.dynamic_slice_in_dim(k, idx * C, C, axis=1)
+            vj = jax.lax.dynamic_slice_in_dim(v, idx * C, C, axis=1)
+            pj = jax.lax.dynamic_slice_in_dim(kv_pos, idx * C, C, axis=1)
+            kej = (jax.lax.dynamic_slice_in_dim(k_extra, idx * C, C, axis=1)
+                   if k_extra is not None else None)
+            return kj, vj, pj, kej
+    else:
+        page = k.shape[1]
+        n_cols = table.shape[1]
+        # blocks per online-softmax step: cover ~kv_chunk positions so the
+        # chunk partition (and hence fp accumulation order) matches the
+        # dense path whenever page | kv_chunk.
+        cb = max(1, min(kv_chunk, n_cols * page) // page)
+        n_chunks = -(-n_cols // cb)
+        padb = n_chunks * cb - n_cols
+        tab = (jnp.pad(table, ((0, 0), (0, padb)), constant_values=-1)
+               if padb else table)
+        C = cb * page
+
+        def chunk_at(idx):
+            tj = jax.lax.dynamic_slice_in_dim(tab, idx * cb, cb, axis=1)
+            safe = jnp.maximum(tj, 0)                         # (B, cb)
+            kj = k[safe].reshape(B, C, Hkv, k.shape[-1])
+            vj = v[safe].reshape(B, C, Hkv, Dv)
+            pj = jnp.where((tj >= 0)[..., None], kv_pos[safe],
+                           -1).reshape(B, C)
+            kej = (k_extra[safe].reshape(B, C, Hkv, k_extra.shape[-1])
+                   if k_extra is not None else None)
+            return kj, vj, pj, kej
 
     m0 = jnp.full((B, S, Hkv, G), NEG_INF, jnp.float32)
     l0 = jnp.zeros((B, S, Hkv, G), jnp.float32)
     a0 = jnp.zeros((B, S, Hkv, G, Dv), jnp.float32)
 
     def body(carry, idx):
-        # k/v stay loop-invariant (no transposed copy of the whole cache);
-        # each step dynamic-slices one chunk.
         m, l, acc = carry
-        kj = jax.lax.dynamic_slice_in_dim(k, idx * C, C, axis=1)
-        vj = jax.lax.dynamic_slice_in_dim(v, idx * C, C, axis=1)
-        pj = jax.lax.dynamic_slice_in_dim(kv_pos, idx * C, C, axis=1)
+        kj, vj, pj, kej = chunk_at(idx)
         s = jnp.einsum("bsngd,bcnd->bsngc", qf, kj.astype(jnp.float32))
         if qe is not None:
-            kej = jax.lax.dynamic_slice_in_dim(k_extra, idx * C, C, axis=1)
             s = s + jnp.einsum("bsngd,bcnd->bsngc", qe,
                                kej.astype(jnp.float32))
         if softcap > 0.0:
@@ -188,10 +230,22 @@ def attn_init(key, cfg) -> dict:
     return p
 
 
+def swa_ring_blocks(window: int, page_size: int, n_cols: int) -> int:
+    """Number of block-table columns a sliding-window layer cycles over:
+    the smallest whole-page ring covering ``window`` positions, clamped to
+    the table width (mirrors the dense ``ring = min(window, cache_len)``)."""
+    return max(1, min(-(-window // page_size), n_cols))
+
+
 def attn_apply(p: dict, x: Array, cfg, *, positions: Array,
                cache: Optional[dict] = None, window: int = 0,
-               kv_chunk: int = 1024, masked_slots: bool = False):
-    """x: (B,S,d). cache (decode): {"k","v": (B,T,Hkv,D), "pos": (B,T)}.
+               kv_chunk: int = 1024, masked_slots: bool = False,
+               table: Optional[Array] = None):
+    """x: (B,S,d). cache (decode): {"k","v": (B,T,Hkv,D), "pos": (B,T)},
+    or a paged pool {"k","v": (N,page,Hkv,D), "pos": (N,page)} when a
+    (B, n_cols) block ``table`` is given — writes scatter through the
+    table and attention gathers pages chunk-wise (SWA layers cycle over
+    the first ``swa_ring_blocks`` table columns as ring pages).
     ``masked_slots=True`` selects the per-row masked cache write
     (continuous-batching chunked prefill: rows with position -1 are
     write no-ops).  Returns (out, new_cache)."""
@@ -214,7 +268,35 @@ def attn_apply(p: dict, x: Array, cfg, *, positions: Array,
     k = rope(k, positions, cfg.rope_theta)
 
     new_cache = None
-    if cache is not None:
+    attn_table = None
+    if cache is not None and table is not None:
+        # ---- paged pool + block table ---------------------------------
+        page = cache["k"].shape[1]
+        if window > 0:
+            nb = swa_ring_blocks(window, page, table.shape[1])
+            tab, ring = table[:, :nb], nb * page
+        else:
+            tab, ring = table, 0
+        if masked_slots and S > 1 and window > 0:
+            # same eviction hazard as the dense ring (below): gather the
+            # pre-write ring pages, attend over [old ring ∥ chunk], write
+            # separately.  The gathered ring is window-sized, so this
+            # stays cheap.
+            old_k = gather_pages(cache["k"], tab)
+            old_v = gather_pages(cache["v"], tab)
+            old_pos = gather_pos(cache["pos"], tab)
+            new_cache = paged_cache_update(cache, k, v, positions, tab,
+                                           ring=ring)
+            k = jnp.concatenate([old_k, k.astype(old_k.dtype)], axis=1)
+            v = jnp.concatenate([old_v, v.astype(old_v.dtype)], axis=1)
+            kv_pos = jnp.concatenate([old_pos, positions], axis=1)
+        else:
+            new_cache = paged_cache_update(cache, k, v, positions, tab,
+                                           ring=ring)
+            k, v = new_cache["k"], new_cache["v"]
+            kv_pos = new_cache["pos"]
+            attn_table = tab
+    elif cache is not None:
         if masked_slots and S > 1 and window > 0:
             # chunked prefill against a populated sliding-window ring:
             # writing the chunk first can EVICT keys still inside the
@@ -244,7 +326,8 @@ def attn_apply(p: dict, x: Array, cfg, *, positions: Array,
     else:
         kv_pos = positions
     out = attention(q, k, v, positions, kv_pos, window=window,
-                    softcap=cfg.logits_softcap, kv_chunk=kv_chunk)
+                    softcap=cfg.logits_softcap, kv_chunk=kv_chunk,
+                    table=attn_table)
     return row_dot(out.reshape(B, S, hq * hd), p["wo"]), new_cache
 
 
@@ -261,8 +344,21 @@ def cache_init(batch: int, cache_len: int, n_kv: int, head_dim: int,
     }
 
 
+def paged_cache_init(num_blocks: int, page_size: int, n_kv: int,
+                     head_dim: int, dtype=jnp.bfloat16) -> dict:
+    """Paged KV pool: ``num_blocks`` pages of ``page_size`` positions,
+    shared by all serving slots through a per-slot block table (the table
+    itself is host-managed and passed into the step separately)."""
+    return {
+        "k": jnp.zeros((num_blocks, page_size, n_kv, head_dim), dtype),
+        "v": jnp.zeros((num_blocks, page_size, n_kv, head_dim), dtype),
+        "pos": jnp.full((num_blocks, page_size), -1, jnp.int32),
+    }
+
+
 def ring_write(buf: Array, val: Array, positions: Array,
-               kind: str = "", per_row: bool = False) -> Array:
+               kind: str = "", per_row: bool = False, *,
+               table: Optional[Array] = None, ring: int = 0) -> Array:
     """SPMD-friendly ring-buffer write (no scatter, so GSPMD never
     all-gathers the cache).
 
@@ -277,8 +373,31 @@ def ring_write(buf: Array, val: Array, positions: Array,
       start at different slots and carry invalid (pos < 0) entries; each
       row is placed by a gather-roll and merged entry-wise on position
       validity, so idle slots and padded tails are write no-ops.
+    * table given (paged pool): buf is a block pool (N, page, ...); each
+      (row, step) entry scatters into
+      ``pool[table[row, logical // page], logical % page]`` where
+      ``logical = pos % ring`` for SWA ring pages (``ring`` > 0) and
+      ``logical = pos`` otherwise.  Entries with position < 0 or an
+      unallocated (-1) table page are dropped — position -1 stays a write
+      no-op, exactly as in the dense paths.
     """
     pin = (lambda x: constrain(x, f"cache/{kind}")) if kind else (lambda x: x)
+    if table is not None:
+        N, page = buf.shape[0], buf.shape[1]
+        n_cols = table.shape[1]
+        cap = ring if ring else n_cols * page
+        if val.shape[1] > cap:          # SWA chunk longer than the ring:
+            val = val[:, -cap:]         # only the last `cap` entries survive
+            positions = positions[:, -cap:]
+        logical = positions % cap if ring else positions
+        col = logical // page
+        blk = jnp.take_along_axis(table, jnp.clip(col, 0, n_cols - 1), axis=1)
+        ok = (positions >= 0) & (col >= 0) & (col < n_cols) & (blk >= 0)
+        blk = jnp.where(ok, blk, N)     # out-of-pool index -> dropped
+        off = logical % page
+        flat = lambda a: a.reshape((-1,) + a.shape[2:])
+        return pin(buf.at[flat(blk), flat(off)].set(
+            flat(val.astype(buf.dtype)), mode="drop"))
     T = buf.shape[1]
     S = val.shape[1]
     val = val.astype(buf.dtype)
@@ -331,6 +450,42 @@ def cache_update(cache: dict, k: Array, v: Array, positions: Array,
                           per_row=per_row),
     }
     return new["k"], new["v"], new["pos"], new
+
+
+def paged_cache_update(cache: dict, k: Array, v: Array, positions: Array,
+                       table: Array, ring: int = 0) -> dict:
+    """Scatter S new entries into the paged pool through the block table
+    (position -1 and unallocated pages are write no-ops).  Returns the new
+    cache pytree; reads go back through ``attention(..., table=...)`` or a
+    gather, so no dense (B, T, ...) view is materialized here."""
+    return {
+        "k": ring_write(cache["k"], k, positions, kind="k", table=table,
+                        ring=ring),
+        "v": ring_write(cache["v"], v, positions, kind="v", table=table,
+                        ring=ring),
+        "pos": ring_write(cache["pos"], positions, positions, kind="pos",
+                          table=table, ring=ring),
+    }
+
+
+def gather_pages(pool: Array, table: Array):
+    """Dense (B, n_cols * page, ...) view of a paged pool through the block
+    table; unallocated (-1) pages read block 0 and must be masked by the
+    caller (use ``gather_pos`` for positions, whose invalid entries become
+    -1)."""
+    B, n_cols = table.shape
+    page = pool.shape[1]
+    return pool[jnp.maximum(table, 0)].reshape(
+        (B, n_cols * page) + pool.shape[2:])
+
+
+def gather_pos(pos_pool: Array, table: Array) -> Array:
+    """Dense (B, n_cols * page) positions view; unallocated pages -> -1."""
+    B, n_cols = table.shape
+    page = pos_pool.shape[1]
+    got = jnp.where((table >= 0)[..., None], pos_pool[jnp.maximum(table, 0)],
+                    -1)
+    return got.reshape(B, n_cols * page)
 
 
 # ---------------------------------------------------------------------------

@@ -51,6 +51,17 @@ def mla_cache_init(batch: int, cache_len: int, cfg, dtype=jnp.bfloat16) -> dict:
     }
 
 
+def mla_paged_cache_init(num_blocks: int, page_size: int, cfg,
+                         dtype=jnp.bfloat16) -> dict:
+    """Paged latent pool: block-table-addressed pages of the compressed
+    (kv_lora_rank + qk_rope_dim) latent cache."""
+    return {
+        "ckv": jnp.zeros((num_blocks, page_size, cfg.kv_lora_rank), dtype),
+        "krope": jnp.zeros((num_blocks, page_size, cfg.qk_rope_dim), dtype),
+        "pos": jnp.full((num_blocks, page_size), -1, jnp.int32),
+    }
+
+
 def _project_q(p, x, cfg, positions):
     B, S, _ = x.shape
     H, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
@@ -71,10 +82,15 @@ def _project_kv_latent(p, x, cfg, positions):
 
 def mla_apply(p: dict, x: Array, cfg, *, positions: Array,
               cache: Optional[dict] = None, decode: bool = False,
-              kv_chunk: int = 1024, masked_slots: bool = False):
+              kv_chunk: int = 1024, masked_slots: bool = False,
+              table: Optional[Array] = None):
     """MLA block.  Returns (out, new_cache).  ``masked_slots=True``
     selects the per-row masked cache write (continuous-batching chunked
-    prefill: rows with position -1 are write no-ops)."""
+    prefill: rows with position -1 are write no-ops).  When a (B, n_cols)
+    block ``table`` is given the cache is a paged latent pool: writes
+    scatter through the table; the absorbed decode path attends the pool
+    page-wise, the naive prefill path gathers the dense latent view
+    (it decompresses the whole cache anyway)."""
     B, S, d = x.shape
     H = cfg.n_heads
     dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
@@ -85,7 +101,28 @@ def mla_apply(p: dict, x: Array, cfg, *, positions: Array,
     ckv, krope = _project_kv_latent(p, x, cfg, positions)
 
     new_cache = None
-    if cache is not None:
+    attn_table = None
+    if cache is not None and table is not None:
+        from repro.models.layers import gather_pages, gather_pos, ring_write
+        new_cache = {
+            "ckv": ring_write(cache["ckv"], ckv, positions, kind="ckv",
+                              table=table),
+            "krope": ring_write(cache["krope"], krope, positions,
+                                kind="krope", table=table),
+            "pos": ring_write(cache["pos"], positions, positions,
+                              kind="pos", table=table),
+        }
+        if decode:
+            # pool-shaped latents flow straight into the paged attention
+            ckv_all, krope_all, kv_pos = (new_cache["ckv"],
+                                          new_cache["krope"],
+                                          new_cache["pos"])
+            attn_table = table
+        else:
+            ckv_all = gather_pages(new_cache["ckv"], table)
+            krope_all = gather_pages(new_cache["krope"], table)
+            kv_pos = gather_pos(new_cache["pos"], table)
+    elif cache is not None:
         from repro.models.layers import ring_write
         new_cache = {
             "ckv": ring_write(cache["ckv"], ckv, positions, kind="ckv",
@@ -111,11 +148,12 @@ def mla_apply(p: dict, x: Array, cfg, *, positions: Array,
         # sharding (kr and dr live on the model axis during decode)
         q_lat = constrain(q_lat, "attn_q")
         q_rope_c = constrain(q_rope, "attn_q")
-        v_lat = ckv_all[:, :, None, :]                           # (B,T,1,kr)
+        v_lat = ckv_all[:, :, None, :]       # (B,T,1,kr) / pool (N,P,1,kr)
         o_lat = attention(q_lat, v_lat, v_lat, positions, kv_pos,
                           scale=scale, kv_chunk=kv_chunk,
                           q_extra=q_rope_c,
-                          k_extra=krope_all[:, :, None, :])      # (B,S,H,kr)
+                          k_extra=krope_all[:, :, None, :],
+                          table=attn_table)                      # (B,S,H,kr)
         wv_b = p["wv_b"].astype(x.dtype).reshape(kr, H, dv)
         o = jnp.einsum("bshk,khd->bshd", o_lat, wv_b)
     else:

@@ -7,6 +7,14 @@ chunks with a rematerialized inner ``lax.scan`` over time steps, so the
 sequence — only chunk-boundary carries are saved for the backward pass.
 The per-chunk bodies are the compute hot spots mirrored by the Pallas
 ``ssm_scan`` kernel in ``repro.kernels``.
+
+Serving-cache note: these mixers carry a fixed-size recurrent state per
+batch row — there is no sequence axis to page, so the paged slot cache
+(block-table KV pools, see ``repro.models.layers``/``serve.engine``)
+leaves SSM/RWKV state per-slot.  The engine's slot reset clears it
+row-wise, and ``layer_apply``'s masked-slot restore puts the previous
+carry back for rows whose positions are all -1 (idle slots ran the scan
+on padding).
 """
 from __future__ import annotations
 

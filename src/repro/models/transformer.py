@@ -24,7 +24,8 @@ from repro.models.hints import constrain
 from repro.models.config import ATTN, DENSE, MAMBA, MOE, RWKV, SWA, ModelConfig
 from repro.models.layers import (attn_apply, attn_init, cache_init, dense_init,
                                  embed_init, ffn_apply, ffn_init, moe_apply,
-                                 moe_init, rmsnorm, rmsnorm_init)
+                                 moe_init, paged_cache_init, rmsnorm,
+                                 rmsnorm_init)
 
 Array = jax.Array
 
@@ -47,7 +48,19 @@ def layer_init(key, spec, cfg: ModelConfig) -> dict:
 
 
 def layer_cache_init(spec, cfg: ModelConfig, batch: int, cache_len: int,
-                     dtype=jnp.bfloat16):
+                     dtype=jnp.bfloat16, *, paged: bool = False,
+                     page_size: int = 16, num_blocks: int = 0):
+    """Dense per-slot cache, or (``paged=True``) a shared block pool of
+    ``num_blocks`` pages per attention-family layer.  SSM/RWKV state is
+    per-slot either way (a recurrent carry has no sequence axis to page)."""
+    if paged and spec.mixer in (ATTN, SWA):
+        # SWA layers share the pool shape and cycle over ring pages via
+        # the block table (see ``swa_ring_blocks``); one block-id space
+        # per model keeps the host-side allocator uniform.
+        if cfg.use_mla:
+            return mla.mla_paged_cache_init(num_blocks, page_size, cfg, dtype)
+        return paged_cache_init(num_blocks, page_size, cfg.n_kv_heads,
+                                cfg.head_dim, dtype)
     if spec.mixer == ATTN:
         if cfg.use_mla:
             return mla.mla_cache_init(batch, cache_len, cfg, dtype)
@@ -64,7 +77,8 @@ def layer_cache_init(spec, cfg: ModelConfig, batch: int, cache_len: int,
 
 def layer_apply(lp: dict, spec, cfg: ModelConfig, x: Array, positions: Array,
                 cache: Optional[dict], *, decode: bool = False,
-                kv_chunk: int = 1024, masked_slots: bool = False):
+                kv_chunk: int = 1024, masked_slots: bool = False,
+                block_table: Optional[Array] = None):
     """Returns (x, new_cache, aux_loss).
 
     ``masked_slots``: batch rows whose positions are all < 0 (idle serving
@@ -73,6 +87,10 @@ def layer_apply(lp: dict, spec, cfg: ModelConfig, x: Array, positions: Array,
     Attention-family caches get this entry-wise from the per-row masked
     ring write (valid for multi-token chunked prefill against a populated
     cache); SSM/RWKV recurrent states are restored row-wise after the scan.
+
+    ``block_table``: (B, n_cols) int32 page table for paged caches —
+    consumed by the attention-family mixers only; recurrent state is
+    per-slot and ignores it.
     """
     x = constrain(x, "residual")
     h = rmsnorm(x, lp["norm1"], cfg.norm_eps)
@@ -82,12 +100,14 @@ def layer_apply(lp: dict, spec, cfg: ModelConfig, x: Array, positions: Array,
             h, new_cache = mla.mla_apply(lp["mixer"], h, cfg, positions=positions,
                                          cache=cache, decode=decode,
                                          kv_chunk=kv_chunk,
-                                         masked_slots=masked_slots)
+                                         masked_slots=masked_slots,
+                                         table=block_table)
         else:
             h, new_cache = attn_apply(lp["mixer"], h, cfg, positions=positions,
                                       cache=cache, window=window,
                                       kv_chunk=kv_chunk,
-                                      masked_slots=masked_slots)
+                                      masked_slots=masked_slots,
+                                      table=block_table)
     elif spec.mixer == MAMBA:
         h, new_cache = ssm.mamba_apply(lp["mixer"], h, cfg, cache=cache)
     elif spec.mixer == RWKV:
@@ -152,14 +172,23 @@ def init_params(rng, cfg: ModelConfig) -> dict:
 
 
 def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
-               dtype=jnp.bfloat16) -> dict:
+               dtype=jnp.bfloat16, *, paged: bool = False,
+               page_size: int = 16, num_blocks: Optional[int] = None) -> dict:
+    """Decode-cache pytree.  ``paged=True`` replaces the dense per-slot
+    (batch, cache_len, ...) attention caches with per-layer block pools of
+    ``num_blocks`` pages (default: the same total memory as the dense
+    cache, ceil(batch * cache_len / page_size) blocks) addressed through a
+    host-managed block table — see ``repro.serve.engine.ServingEngine``."""
+    if num_blocks is None:
+        num_blocks = max(1, -(-batch * cache_len // page_size))
+    kw = dict(paged=paged, page_size=page_size, num_blocks=num_blocks)
     caches = {}
     if cfg.prefix_layers:
         caches["prefix"] = tuple(
-            layer_cache_init(spec, cfg, batch, cache_len, dtype)
+            layer_cache_init(spec, cfg, batch, cache_len, dtype, **kw)
             for spec in cfg.prefix_layers)
     for stack in cfg.stacks:
-        one = tuple(layer_cache_init(spec, cfg, batch, cache_len, dtype)
+        one = tuple(layer_cache_init(spec, cfg, batch, cache_len, dtype, **kw)
                     for spec in stack.period)
         caches["stack"] = jax.tree.map(
             lambda a: jnp.broadcast_to(a[None], (stack.n_periods,) + a.shape),
@@ -202,12 +231,14 @@ def forward(params: dict, cfg: ModelConfig, batch: dict, *,
             caches: Optional[dict] = None, positions: Optional[Array] = None,
             decode: bool = False, remat: bool = False, kv_chunk: int = 1024,
             compute_logits: bool = True, masked_slots: bool = False,
-            remat_policy: str = "full"):
+            remat_policy: str = "full", block_table: Optional[Array] = None):
     """Run the decoder.
 
     Returns (logits_or_hidden, aux_loss, new_caches).  ``positions``
     defaults to arange(S) broadcast over batch.  ``decode=True`` selects
-    single-token cache paths (absorbed MLA etc.).
+    single-token cache paths (absorbed MLA etc.).  ``block_table`` marks
+    ``caches`` as paged pools (see ``init_cache(paged=True)``) and routes
+    every attention-family cache access through the page table.
     """
     x = embed_inputs(params, cfg, batch)
     B, S, _ = x.shape
@@ -221,7 +252,8 @@ def forward(params: dict, cfg: ModelConfig, batch: dict, *,
         c = caches["prefix"][i] if caches is not None else None
         x, nc, a = layer_apply(params["prefix"][i], spec, cfg, x, positions, c,
                                decode=decode, kv_chunk=kv_chunk,
-                               masked_slots=masked_slots)
+                               masked_slots=masked_slots,
+                               block_table=block_table)
         aux += a
         if caches is not None:
             new_caches.setdefault("prefix", []).append(nc)
@@ -236,7 +268,8 @@ def forward(params: dict, cfg: ModelConfig, batch: dict, *,
                 x, nc, a = layer_apply(pp[j], spec, cfg, x, positions,
                                        pc[j] if pc is not None else None,
                                        decode=decode, kv_chunk=kv_chunk,
-                                       masked_slots=masked_slots)
+                                       masked_slots=masked_slots,
+                                       block_table=block_table)
                 ncs.append(nc)
                 a_tot += a
             return x, tuple(ncs), a_tot

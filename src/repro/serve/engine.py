@@ -1,8 +1,11 @@
 """Serving engine: prefill + single-token decode over the model zoo's
 cache pytrees (KV / MLA-latent / SSM-state / SWA-ring), greedy or
-temperature sampling, and a slot-based continuous batcher with
-**chunked prefill** (admission costs ceil(S/chunk) jitted steps, the
-decode tick is one jitted step over all slots).
+per-slot temperature/top-p sampling, and a slot-based continuous batcher
+with **chunked prefill** (admission costs ceil(S/chunk) jitted steps, the
+decode tick is one jitted step over all slots) and a **paged slot cache**
+(vLLM-style block table: per-request cache memory is ceil((prompt +
+max_new) / page_size) pages from a shared pool instead of one
+engine-wide worst-case ``cache_len`` per slot).
 
 ``make_prefill_step`` / ``make_decode_step`` are the functions the
 multi-pod dry-run lowers for the ``prefill_32k`` / ``decode_32k`` /
@@ -18,11 +21,17 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.models.config import ATTN, ModelConfig
+from repro.models.config import ATTN, SWA, ModelConfig
+from repro.models.layers import NEG_INF, swa_ring_blocks
 from repro.models.transformer import forward, init_cache, unembed
 
 Array = jax.Array
+
+# pool leaves of paged attention-family caches (block-indexed, shared
+# across slots); everything else in a cache pytree is per-slot state
+POOL_LEAVES = ("k", "v", "pos", "ckv", "krope")
 
 
 def make_prefill_step(cfg: ModelConfig, *, kv_chunk: int = 1024) -> Callable:
@@ -48,27 +57,68 @@ def make_decode_step(cfg: ModelConfig, *, kv_chunk: int = 1024) -> Callable:
     return decode_step
 
 
-def make_engine_step(cfg: ModelConfig, *, kv_chunk: int = 1024) -> Callable:
-    """(params, caches, tokens (B,S), positions (B,S)) ->
-    (greedy next-token ids (B,1) int32, caches).
+def topp_sample(keys: Array, logits: Array, temperature: Array,
+                top_p: Array) -> Array:
+    """Per-row temperature + nucleus sampling, fully in-jit.
+
+    keys: (B, 2) uint32 raw threefry key data; logits: (B, V) float32;
+    temperature / top_p: (B,) float32.  Rows are sampled independently
+    (vmapped categorical) from the smallest prefix of the sorted
+    distribution whose mass reaches top_p (the top token always stays, so
+    top_p -> 0 degenerates to greedy).  Returns (B, 1) int32.
+    """
+    lg = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    order = jnp.argsort(-lg, axis=-1)
+    slg = jnp.take_along_axis(lg, order, axis=-1)
+    probs = jax.nn.softmax(slg, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    keep = (cum - probs) < top_p[:, None]          # top-1 always kept
+    slg = jnp.where(keep, slg, NEG_INF)
+    idx = jax.vmap(jax.random.categorical)(keys, slg)            # (B,)
+    return jnp.take_along_axis(order, idx[:, None], axis=-1).astype(jnp.int32)
+
+
+def make_engine_step(cfg: ModelConfig, *, kv_chunk: int = 1024,
+                     paged: bool = False) -> Callable:
+    """(params, caches, tokens (B,S), positions (B,S), table (B,n_cols),
+    rng_keys (B,2) uint32, temperature (B,), top_p (B,)) ->
+    (next-token ids (B,1) int32, caches).
 
     The one step function behind the continuous batcher: the SAME jitted
     callable serves chunked prefill (S = chunk) and the batched decode
     tick (S = 1, which statically selects the single-token cache paths —
     absorbed MLA etc.).  Rows/entries with position -1 are cache/state
     no-ops, so idle slots ride along for free.  Only the LAST position is
-    unembedded (the engine never consumes mid-chunk logits) and greedy
-    argmax happens inside the jit, so one (slots, vocab) matmul and
-    (B, 1) token ids are all that leave the step, never (B, S, V) logits.
+    unembedded (the engine never consumes mid-chunk logits) and token
+    selection happens inside the jit — greedy argmax for slots with
+    temperature 0 (bitwise-identical to the greedy-only engine),
+    per-slot temperature/top-p via a (B, 2) PRNG-key array otherwise —
+    so one (slots, vocab) matmul and (B, 1) token ids are all that leave
+    the step, never (B, S, V) logits.
+
+    ``paged=True`` routes every attention-family cache access through the
+    block ``table`` (dense engines pass a dummy, which the forward
+    ignores).
     """
-    def engine_step(params, caches, tokens, positions):
+    def engine_step(params, caches, tokens, positions, table, rng_keys,
+                    temperature, top_p):
         h, _, caches = forward(params, cfg, {"tokens": tokens},
                                caches=caches, positions=positions,
                                decode=tokens.shape[1] == 1,
                                kv_chunk=kv_chunk, compute_logits=False,
-                               masked_slots=True)
-        logits = unembed(params, cfg, h[:, -1:, :])
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+                               masked_slots=True,
+                               block_table=table if paged else None)
+        logits = unembed(params, cfg, h[:, -1:, :])              # (B,1,V)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        # lax.cond so the all-greedy steady state (the default) never pays
+        # the vocab sort/softmax of the sampling branch at runtime
+        tok = jax.lax.cond(
+            jnp.any(temperature > 0.0),
+            lambda: jnp.where(temperature[:, None] > 0.0,
+                              topp_sample(rng_keys, logits[:, 0, :],
+                                          temperature, top_p), greedy),
+            lambda: greedy)
+        return tok, caches
     return engine_step
 
 
@@ -117,12 +167,60 @@ class Request:
     req_id: int
     prompt: List[int]
     max_new: int
+    temperature: float = 0.0     # 0 -> greedy (bitwise-stable default)
+    top_p: float = 1.0
     generated: List[int] = field(default_factory=list)
     pending: int = -1            # next token to feed/emit
     done: bool = False
 
 
-def _clear_slot(caches, s):
+class BlockAllocator:
+    """Host-side free-list over the paged cache pool.
+
+    Admission is **reservation-based**: a request reserves its worst case
+    (``ceil((prompt + max_new) / page_size)`` pages) up front, takes pages
+    lazily (prompt pages at admit, one page per crossed boundary during
+    decode), and releases everything on finish.  Because reserved pages
+    are guaranteed allocatable, decode-time extends can never fail —
+    pool exhaustion surfaces only as admission backpressure (the queue
+    waits) instead of a mid-decode crash.
+    """
+
+    def __init__(self, num_blocks: int):
+        self.num_blocks = num_blocks
+        self._free = list(range(num_blocks - 1, -1, -1))
+        self.reserved = 0
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def can_reserve(self, n: int) -> bool:
+        return self.n_free - self.reserved >= n
+
+    def reserve(self, n: int) -> bool:
+        """Set aside ``n`` future pages; False = backpressure."""
+        if not self.can_reserve(n):
+            return False
+        self.reserved += n
+        return True
+
+    def alloc_one(self) -> int:
+        """Take one page against an existing reservation."""
+        assert self._free, "BlockAllocator: reservation invariant violated"
+        self.reserved -= 1
+        assert self.reserved >= 0, "alloc_one without a reservation"
+        return self._free.pop()
+
+    def free(self, blocks: List[int], unreserve: int = 0) -> None:
+        dup = set(blocks) & set(self._free)
+        assert not dup, f"BlockAllocator: double free of {sorted(dup)}"
+        self._free.extend(blocks)
+        self.reserved -= unreserve
+        assert self.reserved >= 0 and self.n_free <= self.num_blocks
+
+
+def _clear_slot(caches, s, skip_pools: bool = False):
     """Zero one slot's cache/state across every cache kind (KV /
     MLA-latent / SSM-state / SWA-ring) and invalidate its positions.
 
@@ -130,9 +228,15 @@ def _clear_slot(caches, s):
     caches are (slots, ...); stack caches carry one leading ``n_periods``
     axis, i.e. (periods, slots, ...).  Deciding on the pytree path (not
     on shape coincidences like ``shape[0] != slots``) keeps the reset
-    correct when n_periods happens to equal the slot count."""
+    correct when n_periods happens to equal the slot count.
+
+    ``skip_pools=True`` (paged engines) leaves block-pool leaves alone —
+    pools are indexed by block id, not slot, and recycled blocks are
+    scrubbed by ``_clear_blocks`` when they return to the free list."""
     def clear(path, leaf):
         name = str(getattr(path[-1], "key", path[-1]))
+        if skip_pools and name in POOL_LEAVES:
+            return leaf
         top = str(getattr(path[0], "key", path[0]))
         bdim = 1 if top == "stack" else 0
         if leaf.ndim <= bdim:            # defensive: scalar/period-only leaf
@@ -143,52 +247,188 @@ def _clear_slot(caches, s):
     return jax.tree_util.tree_map_with_path(clear, caches)
 
 
+def _clear_blocks(caches, blocks):
+    """Scrub the given pool blocks in every paged cache leaf: keys/values
+    to 0 and positions to -1, so a recycled block can never leak a stale
+    key into its next owner (old positions could pass the causal mask).
+    ``blocks`` is a fixed-width int32 vector padded with an out-of-pool
+    id (scatter mode='drop' ignores the padding), so the jit compiles
+    once regardless of how many blocks a request held."""
+    def clear(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        if name not in POOL_LEAVES:
+            return leaf
+        top = str(getattr(path[0], "key", path[0]))
+        bdim = 1 if top == "stack" else 0
+        idx = (slice(None),) * bdim + (blocks,)
+        fill = -1 if name == "pos" else 0
+        return leaf.at[idx].set(jnp.asarray(fill, leaf.dtype), mode="drop")
+    return jax.tree_util.tree_map_with_path(clear, caches)
+
+
 class ServingEngine:
-    """Fixed-slot continuous batching with **chunked prefill**.
+    """Fixed-slot continuous batching with **chunked prefill** and an
+    optional **paged slot cache** (``paged=True`` — the default in the
+    serving launchers/example; the class itself defaults to the dense
+    rings, which are the bitwise reference semantics).
 
     Requests occupy slots; admission runs the new request's prompt through
     the shared slot cache in ``ceil(S_prompt / chunk)`` batched forward
     steps (other slots masked with position -1) instead of S single-token
     decode calls; every engine tick then decodes one token for all active
-    slots in a single jitted step over the stacked slot state.  Finished
-    slots are recycled through a cache-clearing reset so no KV entries or
-    recurrent state leak into the next occupant.
+    slots in a single jitted step over the stacked slot state.
+
+    **Paged mode** (``paged=True``): attention-family caches live in
+    per-layer pools of ``num_blocks`` pages of ``page_size`` positions
+    (default pool size = the dense cache's memory,
+    ``slots * cache_len / page_size`` pages), addressed through a
+    host-side ``(slots, ceil(cache_len / page_size))`` block table.  A
+    request reserves ``ceil((prompt + max_new) / page_size)`` pages at
+    admission — its OWN worst case, not the engine-wide ``cache_len`` —
+    takes prompt pages immediately and one more page whenever decode
+    crosses a page boundary, and frees everything when it finishes
+    (freed blocks are scrubbed before recycling so no stale keys leak).
+    When the pool cannot cover a reservation the queue backpressures
+    (``stats["backpressure"]``) until a running request finishes; decode
+    of admitted requests NEVER stalls on allocation (reservations make
+    extends infallible).  Sliding-window layers cycle over the first
+    ``ceil(window / page_size)`` table columns as ring pages; SSM/RWKV
+    state stays per-slot (a recurrent carry has no sequence axis).
+    ``paged=False`` selects the dense per-slot ring caches, which remain
+    the bitwise reference semantics.
+
+    Sampling is per-slot and in-jit: requests carry ``temperature`` /
+    ``top_p``; greedy (temperature 0) slots take the argmax path,
+    bitwise-identical to the greedy-only engine, and sampled slots use a
+    counter-based per-slot PRNG key threaded through the step as a
+    ``(slots, 2)`` uint32 array — full logits never leave the device.
 
     Per-slot positions keep the shared batched cache consistent; idle
     slots step with position -1, which every cache kind treats as a
     write/state no-op.  Cache buffers are donated to the jitted step on
-    accelerator backends so the slot cache is updated in place.
+    accelerator backends so the slot cache is updated in place.  Step
+    inputs are assembled in numpy and shipped as one array per operand —
+    never through O(slots) per-slot device ``.at[].set()`` dispatches.
 
     ``stats`` counts jitted forward calls (``prefill_calls`` /
     ``decode_calls``) — the admission cost of an S-token prompt is
-    ``ceil(S/chunk)`` calls, which tests and benchmarks rely on.
+    ``ceil(S/chunk)`` calls, which tests and benchmarks rely on — plus
+    ``admitted`` and paged-pool ``backpressure`` events.
     """
 
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
-                 cache_len: int = 512, chunk: int = 32):
+                 cache_len: int = 512, chunk: int = 32, paged: bool = False,
+                 page_size: int = 16, num_blocks: Optional[int] = None,
+                 seed: int = 0):
         self.params = params
         self.cfg = cfg
         self.slots = slots
         self.cache_len = cache_len
         self.chunk = max(1, min(chunk, cache_len))
+        self.paged = paged
+        self.page_size = page_size
         # full (non-windowed) attention layers must never wrap the ring:
         # every position of prompt + generation needs a live cache entry.
         # SWA rings may wrap freely — chunked prefill attends over
         # [pre-write ring ∥ chunk], so eviction never loses in-window keys.
         specs = tuple(cfg.prefix_layers) + tuple(cfg.period)
-        self._bounded_ctx = any(s.mixer == ATTN for s in specs)
-        self.caches = init_cache(cfg, slots, cache_len)
+        self._has_attn = any(s.mixer == ATTN for s in specs)
+        self._has_swa = any(s.mixer == SWA for s in specs)
+        self._bounded_ctx = self._has_attn
+        if paged:
+            self.n_cols = max(1, -(-cache_len // page_size))
+            self.num_blocks = (num_blocks if num_blocks is not None
+                               else max(1, -(-slots * cache_len // page_size)))
+            self._alloc = BlockAllocator(self.num_blocks)
+            self._ring_blocks = (swa_ring_blocks(cfg.sliding_window,
+                                                 page_size, self.n_cols)
+                                 if self._has_swa else 0)
+            self._table = np.full((slots, self.n_cols), -1, np.int32)
+            self._slot_reserved = [0] * slots
+            self.caches = init_cache(cfg, slots, cache_len, paged=True,
+                                     page_size=page_size,
+                                     num_blocks=self.num_blocks)
+        else:
+            self.num_blocks = 0
+            self._table = np.zeros((slots, 1), np.int32)   # dummy, unread
+            self.caches = init_cache(cfg, slots, cache_len)
         # buffer donation is a no-op on CPU and would only warn
         donate = jax.default_backend() != "cpu"
-        self._step_fn = jax.jit(make_engine_step(cfg),
-                                donate_argnums=(1,) if donate else ())
-        self._reset_fn = jax.jit(_clear_slot,
-                                 donate_argnums=(0,) if donate else ())
+        dn = dict(donate_argnums=(1,)) if donate else {}
+        d0 = dict(donate_argnums=(0,)) if donate else {}
+        self._step_fn = jax.jit(make_engine_step(cfg, paged=paged), **dn)
+        self._reset_fn = jax.jit(partial(_clear_slot, skip_pools=paged), **d0)
+        self._clear_blocks_fn = jax.jit(_clear_blocks, **d0)
         self.active: List[Optional[Request]] = [None] * slots
         self.positions = [0] * slots
         self.queue: List[Request] = []
         self.finished: List[Request] = []
-        self.stats = {"prefill_calls": 0, "decode_calls": 0, "admitted": 0}
+        self.stats = {"prefill_calls": 0, "decode_calls": 0, "admitted": 0,
+                      "backpressure": 0}
+        self._seed = seed
+        self._step_seq = 0
+        self._temp = np.zeros((slots,), np.float32)
+        self._topp = np.ones((slots,), np.float32)
+
+    # -- paged-pool bookkeeping (host side) -----------------------------
+
+    def _blocks_for(self, logical_len: int) -> int:
+        """Pages a request of total logical length ``logical_len`` can
+        ever touch: its own ceil(len/page) for bounded (full-attention)
+        context, the SWA ring size for window-only models, zero for pure
+        recurrent models."""
+        if not self.paged:
+            return 0
+        nb = -(-logical_len // self.page_size)
+        if self._has_attn:
+            return min(nb, self.n_cols)
+        if self._has_swa:
+            return min(nb, self._ring_blocks)
+        return 0
+
+    def _ensure_blocks(self, s: int, p_lo: int, p_hi: int) -> None:
+        """Allocate the table columns that writes at positions
+        [p_lo, p_hi] will touch (no-op for columns already mapped —
+        e.g. a wrapped SWA ring reuses its pages)."""
+        if not self.paged:
+            return
+        P = self.page_size
+        if self._has_attn:
+            cols = range(p_lo // P, p_hi // P + 1)
+        elif self._has_swa:
+            ring_p = self._ring_blocks * P
+            if p_hi - p_lo + 1 >= ring_p:
+                cols = range(self._ring_blocks)
+            else:
+                c0, c1 = (p_lo % ring_p) // P, (p_hi % ring_p) // P
+                cols = (range(c0, c1 + 1) if c0 <= c1 else
+                        list(range(c0, self._ring_blocks))
+                        + list(range(c1 + 1)))
+        else:
+            return
+        for c in cols:
+            if self._table[s, c] < 0:
+                self._table[s, c] = self._alloc.alloc_one()
+                self._slot_reserved[s] -= 1
+
+    def _free_slot_blocks(self, s: int) -> None:
+        """Return a finished slot's pages to the pool, scrubbed (keys
+        zeroed, positions -1) so the next owner can't see stale entries,
+        and release any unused reservation."""
+        if not self.paged:
+            return
+        blocks = [int(b) for b in self._table[s] if b >= 0]
+        if blocks or self._slot_reserved[s]:
+            self._alloc.free(blocks, unreserve=self._slot_reserved[s])
+            self._slot_reserved[s] = 0
+        if blocks:
+            pad = np.full((self.n_cols,), self.num_blocks, np.int32)
+            pad[:len(blocks)] = blocks
+            self.caches = self._clear_blocks_fn(self.caches,
+                                                jnp.asarray(pad))
+        self._table[s] = -1
+
+    # -- request intake --------------------------------------------------
 
     def submit(self, req: Request) -> None:
         if not req.prompt:
@@ -203,6 +443,13 @@ class ServingEngine:
                 f"{len(req.prompt)} prompt + {req.max_new} new tokens but "
                 f"cache_len={self.cache_len}; full-attention caches must "
                 f"not wrap (raise cache_len or lower max_new)")
+        if self.paged:
+            need = self._blocks_for(len(req.prompt) + req.max_new)
+            if need > self.num_blocks:
+                raise ValueError(
+                    f"ServingEngine: request {req.req_id} needs {need} cache "
+                    f"pages but the pool has only {self.num_blocks} — it "
+                    f"could never be admitted (raise num_blocks)")
         self.queue.append(req)
 
     def warmup(self) -> None:
@@ -211,38 +458,71 @@ class ServingEngine:
         them with every position masked (-1), which is a cache no-op, so
         warmup never perturbs engine state."""
         for C in sorted({self.chunk, 1}):
-            toks = jnp.zeros((self.slots, C), jnp.int32)
-            pos = jnp.full((self.slots, C), -1, jnp.int32)
-            _, self.caches = self._step_fn(self.params, self.caches,
-                                           toks, pos)
+            toks = np.zeros((self.slots, C), np.int32)
+            pos = np.full((self.slots, C), -1, np.int32)
+            _, self.caches = self._call_step(toks, pos)
         # compile the reset against a FREE slot only (resetting it is
         # harmless — admission resets again); never touch a live one
         free = [s for s in range(self.slots) if self.active[s] is None]
         if free:
             self.caches = self._reset_fn(self.caches, free[-1])
+        if self.paged:
+            # all-padding block vector: scrub is a compiled no-op
+            pad = np.full((self.n_cols,), self.num_blocks, np.int32)
+            self.caches = self._clear_blocks_fn(self.caches,
+                                                jnp.asarray(pad))
         jax.block_until_ready(self.caches)
 
+    # -- the serving loop ------------------------------------------------
+
+    def _call_step(self, toks: np.ndarray, pos: np.ndarray):
+        """One jitted engine step; host-side operands (numpy) convert to
+        device arrays ONCE here.  The per-slot PRNG keys are counter-based
+        (slot seed, step counter), so sampling streams are deterministic
+        and never leave host control."""
+        keys = np.empty((self.slots, 2), np.uint32)
+        keys[:, 0] = np.arange(self._seed, self._seed + self.slots,
+                               dtype=np.uint32)
+        keys[:, 1] = np.uint32(self._step_seq)
+        self._step_seq += 1
+        return self._step_fn(self.params, self.caches, jnp.asarray(toks),
+                             jnp.asarray(pos), jnp.asarray(self._table),
+                             jnp.asarray(keys), jnp.asarray(self._temp),
+                             jnp.asarray(self._topp))
+
     def _admit(self) -> None:
-        """Chunked-prefill admission: reset the slot's cache, then walk the
-        prompt through it ``chunk`` tokens per jitted step (other slots
-        masked with position -1).  The final chunk may be shorter — it
-        compiles once per distinct remainder length."""
+        """Chunked-prefill admission: reserve the request's worst-case
+        pages (paged mode; insufficient pool = backpressure, the queue
+        stays FIFO), reset the slot's per-slot state, then walk the
+        prompt through the cache ``chunk`` tokens per jitted step (other
+        slots masked with position -1).  The final chunk may be shorter —
+        it compiles once per distinct remainder length."""
         for s in range(self.slots):
             if self.active[s] is None and self.queue:
-                req = self.queue.pop(0)
+                req = self.queue[0]
+                if self.paged:
+                    need = self._blocks_for(len(req.prompt) + req.max_new)
+                    if not self._alloc.reserve(need):
+                        self.stats["backpressure"] += 1
+                        break          # FIFO: later requests wait too
+                    self._slot_reserved[s] = need
+                self.queue.pop(0)
                 self.active[s] = req
                 self.caches = self._reset_fn(self.caches, s)
-                prompt = jnp.asarray(req.prompt, jnp.int32)
-                S = int(prompt.shape[0])
+                self._temp[s] = req.temperature
+                self._topp[s] = req.top_p
+                prompt = np.asarray(req.prompt, np.int32)
+                S = len(req.prompt)
                 nxt = None
                 for c0 in range(0, S, self.chunk):
                     piece = prompt[c0:c0 + self.chunk]
-                    C = int(piece.shape[0])
-                    toks = jnp.zeros((self.slots, C), jnp.int32).at[s].set(piece)
-                    pos = jnp.full((self.slots, C), -1, jnp.int32).at[s].set(
-                        jnp.arange(c0, c0 + C, dtype=jnp.int32))
-                    nxt, self.caches = self._step_fn(self.params, self.caches,
-                                                     toks, pos)
+                    C = len(piece)
+                    self._ensure_blocks(s, c0, c0 + C - 1)
+                    toks = np.zeros((self.slots, C), np.int32)
+                    toks[s] = piece
+                    pos = np.full((self.slots, C), -1, np.int32)
+                    pos[s] = np.arange(c0, c0 + C, dtype=np.int32)
+                    nxt, self.caches = self._call_step(toks, pos)
                     self.stats["prefill_calls"] += 1
                 self.positions[s] = S
                 req.pending = int(nxt[s, -1])
@@ -256,12 +536,13 @@ class ServingEngine:
         act = [s for s in range(self.slots) if self.active[s] is not None]
         if not act:
             return 0
-        toks = jnp.zeros((self.slots, 1), jnp.int32)
-        pos = jnp.full((self.slots, 1), -1, jnp.int32)
+        toks = np.zeros((self.slots, 1), np.int32)
+        pos = np.full((self.slots, 1), -1, np.int32)
         for s in act:
-            toks = toks.at[s, 0].set(self.active[s].pending)
-            pos = pos.at[s, 0].set(self.positions[s])
-        nxt, self.caches = self._step_fn(self.params, self.caches, toks, pos)
+            self._ensure_blocks(s, self.positions[s], self.positions[s])
+            toks[s, 0] = self.active[s].pending
+            pos[s, 0] = self.positions[s]
+        nxt, self.caches = self._call_step(toks, pos)
         self.stats["decode_calls"] += 1
         for s in act:
             req = self.active[s]
@@ -272,6 +553,11 @@ class ServingEngine:
                 req.done = True
                 self.finished.append(req)
                 self.active[s] = None
+                self._free_slot_blocks(s)
+                # back to greedy defaults so an idle slot can't keep the
+                # all-greedy sampling fast path (lax.cond) switched off
+                self._temp[s] = 0.0
+                self._topp[s] = 1.0
         return len(act)
 
     def run(self, max_ticks: int = 10_000) -> List[Request]:

@@ -1,0 +1,309 @@
+"""Paged slot cache tests: paged-vs-dense-vs-``generate()`` greedy parity
+across cache kinds (full-attention KV, SWA ring pages, MLA latent pool,
+recurrent state), block-allocator accounting (reservation admission,
+free-list recycle, double-free detection), pool-exhaustion backpressure,
+block-recycle scrubbing, per-slot in-jit sampling, and the
+more-concurrency-at-equal-memory property the paging exists for."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.transformer import init_cache, init_params
+from repro.serve.engine import (BlockAllocator, Request, ServingEngine,
+                                _clear_blocks, generate)
+
+
+def _tiny_cfg():
+    cfg = get_smoke_config("gpt3-24l")
+    return dataclasses.replace(cfg, vocab_size=128, d_model=128, d_ff=256,
+                               n_heads=4, n_kv_heads=4, head_dim=32)
+
+
+def _params(cfg, seed=0):
+    return init_params(jax.random.PRNGKey(seed), cfg)
+
+
+def _run_engine(params, cfg, prompts, *, max_new=4, paged=True, **kw):
+    eng = ServingEngine(params, cfg, paged=paged, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(i, p, max_new=max_new))
+    return {r.req_id: r.generated for r in eng.run()}, eng
+
+
+def _refs(params, cfg, prompts, max_new=4):
+    return [generate(params, cfg, jnp.asarray([p], jnp.int32),
+                     max_new=max_new)[0, len(p):].tolist() for p in prompts]
+
+
+# ---------------------------------------------------------------------------
+# Greedy parity: paged == dense == generate(), every cache kind
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["gpt3-24l", "gemma3-12b", "rwkv6-7b"])
+def test_paged_matches_dense_and_generate(arch):
+    """Mixed prompt lengths straddling page (16) and chunk (4) boundaries,
+    4 requests over 2 slots (slot + block recycle on the fly)."""
+    cfg = _tiny_cfg() if arch == "gpt3-24l" else get_smoke_config(arch)
+    params = _params(cfg)
+    prompts = [[7], [1, 2, 3], [5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16,
+                                17, 18, 19, 20, 21],
+               [9, 8, 7, 6, 5, 4, 3, 2, 1]]
+    kw = dict(slots=2, cache_len=64, chunk=4, page_size=16)
+    dense, _ = _run_engine(params, cfg, prompts, paged=False, **kw)
+    paged, _ = _run_engine(params, cfg, prompts, paged=True, **kw)
+    refs = _refs(params, cfg, prompts)
+    for i in range(len(prompts)):
+        assert paged[i] == dense[i] == refs[i], (arch, i, paged[i], dense[i],
+                                                 refs[i])
+
+
+@pytest.mark.parametrize("chunk", [16, 80])
+def test_paged_swa_ring_wrap_parity(chunk):
+    """Prompt longer than the sliding window: the SWA ring pages wrap and
+    recycle table columns mid-prefill; greedy output must equal both the
+    dense ring engine and generate() for any chunk size."""
+    cfg = get_smoke_config("gemma3-12b")          # window 64
+    params = _params(cfg, 7)
+    prompts = [[(i * 7 + 3) % cfg.vocab_size for i in range(80)]]
+    kw = dict(slots=1, cache_len=128, chunk=chunk, page_size=16)
+    dense, _ = _run_engine(params, cfg, prompts, max_new=6, paged=False, **kw)
+    paged, _ = _run_engine(params, cfg, prompts, max_new=6, paged=True, **kw)
+    refs = _refs(params, cfg, prompts, max_new=6)
+    assert paged[0] == dense[0] == refs[0]
+
+
+def test_paged_mla_latent_pool_parity():
+    """DeepSeek-V3 MLA: paged latent pool through both the naive prefill
+    gather and the absorbed page-wise decode.  MoE capacity dropping is
+    per-call-batch-dependent, so admission is shape-identical to
+    generate()'s prefill (slots=1, chunk >= prompt) — isolating the paged
+    latent machinery (same caveat as the dense engine test)."""
+    cfg = get_smoke_config("deepseek-v3-671b")
+    params = _params(cfg)
+    for p in [[1, 2, 3], [5, 6, 7, 8, 9], [9, 8, 7, 6, 5, 4, 3, 2, 1]]:
+        done, _ = _run_engine(params, cfg, [p], slots=1, cache_len=64,
+                              chunk=len(p), page_size=4)
+        ref = _refs(params, cfg, [p])[0]
+        assert done[0] == ref, (p, done[0], ref)
+
+
+def test_paged_hybrid_ssm_state_stays_per_slot():
+    """Jamba (Mamba + attention + MoE): paged KV pools coexist with
+    per-slot recurrent state; parity vs the dense engine (whole-prompt
+    admits sidestep the MoE chunking caveat)."""
+    cfg = get_smoke_config("jamba-1.5-large-398b")
+    params = _params(cfg)
+    prompts = [[1, 2, 3], [5, 6, 7, 8, 9]]
+    kw = dict(slots=2, cache_len=64, chunk=64, page_size=16)
+    dense, _ = _run_engine(params, cfg, prompts, paged=False, **kw)
+    paged, _ = _run_engine(params, cfg, prompts, paged=True, **kw)
+    refs = _refs(params, cfg, prompts)
+    for i in range(len(prompts)):
+        assert paged[i] == dense[i] == refs[i]
+
+
+def test_paged_late_arrival_heterogeneous_lengths():
+    """A long and a short request decode concurrently; a third arrives
+    mid-decode and is admitted into recycled pages."""
+    cfg = _tiny_cfg()
+    params = _params(cfg, 1)
+    eng = ServingEngine(params, cfg, slots=2, cache_len=64, chunk=4,
+                        paged=True, page_size=8)
+    eng.submit(Request(0, list(range(1, 20)), max_new=8))
+    eng.submit(Request(1, [9, 8], max_new=3))
+    ticks = 0
+    while eng.tick():
+        ticks += 1
+        if ticks == 2:
+            eng.submit(Request(2, [4, 5, 6, 7], max_new=4))
+    done = {r.req_id: r.generated for r in eng.finished}
+    for rid, p in [(0, list(range(1, 20))), (1, [9, 8]), (2, [4, 5, 6, 7])]:
+        ref = generate(params, cfg, jnp.asarray([p], jnp.int32),
+                       max_new=len(done[rid]))[0, len(p):].tolist()
+        assert done[rid] == ref, (rid, done[rid], ref)
+
+
+# ---------------------------------------------------------------------------
+# Allocator + pool hygiene
+# ---------------------------------------------------------------------------
+
+def test_block_allocator_accounting():
+    a = BlockAllocator(4)
+    assert a.n_free == 4 and a.reserved == 0
+    assert a.reserve(3)
+    assert not a.reserve(2)            # 4 - 3 < 2
+    assert a.reserve(1)
+    b0, b1 = a.alloc_one(), a.alloc_one()
+    assert a.n_free == 2 and a.reserved == 2
+    a.free([b0], unreserve=1)          # one page back + unused reservation
+    assert a.n_free == 3 and a.reserved == 1
+    with pytest.raises(AssertionError, match="double free"):
+        a.free([b0])
+    a.free([b1], unreserve=1)
+    assert a.n_free == 4 and a.reserved == 0
+
+
+def test_pool_exhaustion_backpressures_not_crashes():
+    """Pool too small for both requests at once: the second waits in the
+    queue (stats['backpressure'] ticks) and both finish correct."""
+    cfg = _tiny_cfg()
+    params = _params(cfg)
+    eng = ServingEngine(params, cfg, slots=2, cache_len=64, chunk=4,
+                        paged=True, page_size=8, num_blocks=3)
+    eng.submit(Request(0, [1, 2, 3, 4, 5, 6], max_new=8))     # 2 pages
+    eng.submit(Request(1, [9, 8, 7, 6, 5], max_new=4))        # 2 pages
+    done = {r.req_id: r.generated for r in eng.run()}
+    assert eng.stats["backpressure"] > 0
+    for rid, (p, mn) in {0: ([1, 2, 3, 4, 5, 6], 8),
+                         1: ([9, 8, 7, 6, 5], 4)}.items():
+        ref = generate(params, cfg, jnp.asarray([p], jnp.int32),
+                       max_new=mn)[0, len(p):].tolist()
+        assert done[rid] == ref, (rid, done[rid], ref)
+
+
+def test_impossible_request_rejected_at_submit():
+    cfg = _tiny_cfg()
+    params = _params(cfg)
+    eng = ServingEngine(params, cfg, slots=1, cache_len=64, chunk=4,
+                        paged=True, page_size=8, num_blocks=2)
+    with pytest.raises(ValueError, match="cache pages"):
+        eng.submit(Request(0, list(range(1, 30)), max_new=4))  # 33 tok > 16
+    assert not eng.queue
+
+
+def test_block_recycle_is_scrubbed():
+    """A recycled block must come back with zeroed K/V and positions -1 —
+    stale positions from the previous owner could pass the causal mask."""
+    cfg = _tiny_cfg()
+    caches = init_cache(cfg, 2, 64, paged=True, page_size=8, num_blocks=6)
+    def fill(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        return jnp.zeros_like(leaf) + (3 if name == "pos" else 1)
+    caches = jax.tree_util.tree_map_with_path(fill, caches)
+    blocks = jnp.asarray([1, 4, 6, 6], jnp.int32)   # 6 = out-of-pool pad
+    cleared = _clear_blocks(caches, blocks)
+
+    def check(path, before, after):
+        name = str(getattr(path[-1], "key", path[-1]))
+        top = str(getattr(path[0], "key", path[0]))
+        bdim = 1 if top == "stack" else 0
+        b, a = np.asarray(before), np.asarray(after)
+        want = -1 if name == "pos" else 0
+        sl = (slice(None),) * bdim
+        assert (a[sl + ([1, 4],)] == want).all(), (path,)
+        np.testing.assert_array_equal(a[sl + ([0, 2, 3, 5],)],
+                                      b[sl + ([0, 2, 3, 5],)],
+                                      err_msg=f"{path}: untouched blocks")
+    jax.tree_util.tree_map_with_path(check, caches, cleared)
+
+
+def test_slot_reuse_through_recycled_blocks():
+    """slots=1, pool exactly one request wide: the second request MUST run
+    on the first one's recycled blocks and still match generate()."""
+    cfg = _tiny_cfg()
+    params = _params(cfg, 2)
+    eng = ServingEngine(params, cfg, slots=1, cache_len=32, chunk=4,
+                        paged=True, page_size=8, num_blocks=2)
+    eng.submit(Request(0, [5, 6, 7, 8, 9, 10, 11], max_new=4))
+    eng.submit(Request(1, [1, 2, 3], max_new=4))
+    done = {r.req_id: r.generated for r in eng.run()}
+    ref = generate(params, cfg, jnp.asarray([[1, 2, 3]], jnp.int32),
+                   max_new=4)[0, 3:].tolist()
+    assert done[1] == ref, (done[1], ref)
+
+
+def test_paged_pool_serves_more_concurrency_at_equal_memory():
+    """The point of paging: at the same cache memory, heterogeneous
+    requests overlap more.  Dense: 3 slots × worst-case 64 = 192 entries.
+    Paged: same 192 entries as 24 pages of 8 — short requests take 1-2
+    pages, so >3 run concurrently."""
+    cfg = _tiny_cfg()
+    params = _params(cfg, 3)
+    long_p, short_p = list(range(1, 49)), [7, 8, 9]
+    reqs = [(long_p, 16)] + [(short_p, 8)] * 6
+    peak = {}
+    for paged, slots in [(False, 3), (True, 7)]:
+        eng = ServingEngine(params, cfg, slots=slots, cache_len=64, chunk=16,
+                            paged=paged, page_size=8,
+                            num_blocks=24 if paged else None)
+        for i, (p, mn) in enumerate(reqs):
+            eng.submit(Request(i, p, max_new=mn))
+        peak[paged] = 0
+        while True:
+            n = eng.tick()
+            if not n and not eng.queue:
+                break
+            peak[paged] = max(peak[paged], n)
+    assert peak[True] > peak[False], peak
+    assert peak[False] <= 3 and peak[True] >= 5, peak
+
+
+# ---------------------------------------------------------------------------
+# Per-slot in-jit sampling
+# ---------------------------------------------------------------------------
+
+def test_greedy_slots_bitwise_stable_next_to_sampled():
+    """temperature=0 slots must be bitwise-identical to the all-greedy
+    engine even when a sampled request shares the batch."""
+    cfg = _tiny_cfg()
+    params = _params(cfg)
+    g, _ = _run_engine(params, cfg, [[1, 2, 3]], max_new=6, paged=False,
+                       slots=2, cache_len=64, chunk=4)
+    eng = ServingEngine(params, cfg, slots=2, cache_len=64, chunk=4,
+                        paged=True, page_size=16)
+    eng.submit(Request(0, [1, 2, 3], max_new=6))
+    eng.submit(Request(1, [4, 5, 6], max_new=6, temperature=1.5, top_p=0.9))
+    done = {r.req_id: r.generated for r in eng.run()}
+    assert done[0] == g[0], (done[0], g[0])
+    assert all(0 <= t < cfg.vocab_size for t in done[1])
+
+
+def test_sampling_deterministic_given_seed():
+    cfg = _tiny_cfg()
+    params = _params(cfg)
+    outs = []
+    for _ in range(2):
+        eng = ServingEngine(params, cfg, slots=1, cache_len=64, chunk=4,
+                            paged=True, seed=11)
+        eng.submit(Request(0, [4, 5, 6], max_new=8, temperature=1.0,
+                           top_p=0.8))
+        outs.append(eng.run()[0].generated)
+    assert outs[0] == outs[1]
+    eng = ServingEngine(params, cfg, slots=1, cache_len=64, chunk=4,
+                        paged=True, seed=12)
+    eng.submit(Request(0, [4, 5, 6], max_new=8, temperature=1.0, top_p=0.8))
+    assert eng.run()[0].generated != outs[0]   # seed actually matters
+
+
+def test_finished_sampled_slot_resets_to_greedy_defaults():
+    """A finished sampled request must hand its slot back with greedy
+    defaults — otherwise an idle slot keeps the all-greedy lax.cond fast
+    path switched off forever (and later greedy occupants stay bitwise
+    regardless)."""
+    cfg = _tiny_cfg()
+    params = _params(cfg)
+    eng = ServingEngine(params, cfg, slots=2, cache_len=64, chunk=4,
+                        paged=True)
+    eng.submit(Request(0, [1, 2, 3], max_new=2, temperature=1.0, top_p=0.7))
+    eng.run()
+    assert float(eng._temp.max()) == 0.0 and float(eng._topp.min()) == 1.0
+    eng.submit(Request(1, [4, 5, 6], max_new=4))
+    out = eng.run()[1].generated
+    fresh = ServingEngine(params, cfg, slots=2, cache_len=64, chunk=4,
+                          paged=True)
+    fresh.submit(Request(9, [4, 5, 6], max_new=4))
+    assert out == fresh.run()[0].generated
+
+
+def test_top_p_zero_degenerates_to_greedy():
+    cfg = _tiny_cfg()
+    params = _params(cfg)
+    g, _ = _run_engine(params, cfg, [[1, 2, 3]], max_new=6, paged=False,
+                       slots=1, cache_len=64, chunk=4)
+    eng = ServingEngine(params, cfg, slots=1, cache_len=64, chunk=4)
+    eng.submit(Request(0, [1, 2, 3], max_new=6, temperature=1.0, top_p=1e-9))
+    assert eng.run()[0].generated == g[0]

@@ -62,6 +62,20 @@ def test_cache_rules_cover_all_leaves(arch):
             or list(s)[0] is None
 
 
+@pytest.mark.parametrize("arch", ["qwen3-8b", "deepseek-v3-671b",
+                                  "gemma3-12b"])
+def test_cache_rules_cover_paged_pools(arch):
+    """The name-keyed cache rules must also cover paged pool leaves
+    (block axis in place of batch) — the dry-run's --paged engine-step
+    lowering shards them with the same table."""
+    from repro.launch.shardings import cache_specs
+    cfg = get_config(arch)
+    c = caches_sds(cfg, 128, 1024, paged=True, page_size=16)
+    specs = cache_specs(c, _FakeMesh(), batch_size=128)
+    assert len(jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))) \
+        == len(jax.tree.leaves(c))
+
+
 def test_sanitize_drops_nondivisible():
     from repro.launch.shardings import sanitize_spec
     s = sanitize_spec(P("data", "model"), (24, 64), _FakeMesh())
