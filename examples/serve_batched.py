@@ -9,7 +9,10 @@ per-slot rings): each request takes ceil((prompt + max_new) / page_size)
 pages from a shared ``--num-blocks`` pool through a block table, so
 short and long requests stop sharing one worst-case cache_len and the
 queue backpressures (instead of crashing) when the pool is full.  The
-example asserts paged and dense decode are token-identical.
+example asserts paged and dense decode are token-identical (and, with
+``--kernel``, that the fused Pallas paged-decode kernel matches the
+scan path too).  ``--temperature``/``--top-p``/``--top-k``/
+``--rep-penalty`` exercise the in-jit per-slot sampler instead.
 
     PYTHONPATH=src python examples/serve_batched.py --arch rwkv6-7b
 """
@@ -23,20 +26,23 @@ from repro.models.transformer import init_params
 from repro.serve.engine import Request, ServingEngine, generate
 
 
-def serve(params, cfg, args, paged: bool):
+def serve(params, cfg, args, paged: bool, use_kernel: bool = False):
     engine = ServingEngine(params, cfg, slots=args.slots, cache_len=96,
                            chunk=args.chunk, paged=paged,
                            page_size=args.page_size,
-                           num_blocks=args.num_blocks or None)
+                           num_blocks=args.num_blocks or None,
+                           use_kernel=use_kernel)
+    sample_kw = dict(temperature=args.temperature, top_p=args.top_p,
+                     top_k=args.top_k, rep_penalty=args.rep_penalty)
     # first wave
     for i in range(4):
-        engine.submit(Request(i, [1 + i, 2, 3], max_new=6))
+        engine.submit(Request(i, [1 + i, 2, 3], max_new=6, **sample_kw))
     ticks = 0
     while engine.tick():
         ticks += 1
         if ticks == 3:   # late arrivals join running batch
-            engine.submit(Request(100, [7, 8, 9, 10], max_new=5))
-            engine.submit(Request(101, [7, 8, 9, 10], max_new=5))
+            engine.submit(Request(100, [7, 8, 9, 10], max_new=5, **sample_kw))
+            engine.submit(Request(101, [7, 8, 9, 10], max_new=5, **sample_kw))
     return engine, ticks
 
 
@@ -52,11 +58,22 @@ def main():
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--num-blocks", type=int, default=0,
                     help="0 = same memory as the dense cache")
+    ap.add_argument("--kernel", action="store_true",
+                    help="decode through the fused Pallas paged-attention "
+                         "kernel (paged mode only)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-request sampling temperature (0 = greedy)")
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="0 = no top-k cut")
+    ap.add_argument("--rep-penalty", type=float, default=1.0,
+                    help="1.0 = no repetition penalty")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
     params = init_params(jax.random.PRNGKey(0), cfg)
-    engine, ticks = serve(params, cfg, args, paged=args.paged)
+    engine, ticks = serve(params, cfg, args, paged=args.paged,
+                          use_kernel=args.kernel)
     done = sorted(engine.finished, key=lambda r: r.req_id)
     st = engine.stats
     mode = (f"paged pool {engine.num_blocks}x{engine.page_size}"
@@ -78,6 +95,11 @@ def main():
         print("MoE arch: slot-isolation/parity self-checks skipped "
               "(capacity dropping is batch-coupled)")
         return
+    if args.temperature > 0 or args.rep_penalty != 1.0:
+        # sampled slots use per-slot PRNG streams / penalized logits, so
+        # the greedy parity self-checks below don't apply
+        print("sampling on: greedy parity self-checks skipped")
+        return
     # same-prompt requests must decode identically (slot isolation)
     assert done[-1].generated == done[-2].generated
     ref = generate(params, cfg,
@@ -90,6 +112,12 @@ def main():
         dense = sorted(other.finished, key=lambda r: r.req_id)
         assert [r.generated for r in done] == [r.generated for r in dense]
         print("paged decode == dense decode ✓")
+        if args.kernel:
+            scan, _ = serve(params, cfg, args, paged=True, use_kernel=False)
+            spath = sorted(scan.finished, key=lambda r: r.req_id)
+            assert [r.generated for r in done] == [r.generated
+                                                   for r in spath]
+            print("kernel decode == scan-path decode ✓")
 
 
 if __name__ == "__main__":

@@ -1,3 +1,12 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas TPU kernels: the serving engine's paged-decode attention fast
+# path (paged_attention.py, dispatched via layers.attention(...,
+# use_kernel=True)) plus the seed flash-attention / SSM-scan / int8
+# kernels.  Public surface = the jit'd wrappers in ops.py; parity
+# oracles in ref.py / the model's blocked attention.  See README.md for
+# the grid/BlockSpec layouts and the interpret-mode CPU story.
+import jax.experimental.pallas.tpu as _pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams; one shim here so the
+# kernels import (and run in interpret mode) on either side of the rename
+CompilerParams = (getattr(_pltpu, "CompilerParams", None)
+                  or _pltpu.TPUCompilerParams)

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_attention as _pa
 from repro.kernels import quantize as _q
 from repro.kernels import ssm_scan as _s
 
@@ -30,6 +31,22 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     return _fa.flash_attention_fwd(q, k, v, causal=causal, window=window,
                                    scale=scale, block_q=block_q,
                                    block_k=block_k, interpret=_INTERPRET)
+
+
+@partial(jax.jit, static_argnames=("scale", "window", "softcap"))
+def paged_attention(q, k, v, pos, table, q_pos, *,
+                    scale: float | None = None, window: int = 0,
+                    softcap: float = 0.0, q_extra=None, k_extra=None):
+    """Paged single-token decode attention over a block-table pool.
+
+    q: (B,1,Hq,D); k/v: (N,page,Hkv,D*) pools; pos: (N,page); table:
+    (B,n_cols); q_pos: (B,1) -> (B,1,Hq,Dv).  The block table is
+    scalar-prefetched and drives the page DMA — no gathered K/V copy
+    lands in HBM (see ``repro.kernels.paged_attention``)."""
+    return _pa.paged_attention_fwd(q, k, v, pos, table, q_pos, scale=scale,
+                                   window=window, softcap=softcap,
+                                   q_extra=q_extra, k_extra=k_extra,
+                                   interpret=_INTERPRET)
 
 
 @partial(jax.jit, static_argnames=("block",))

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels import CompilerParams
+
 DEFAULT_CHUNK = 64
 DEFAULT_DI_BLOCK = 512
 
@@ -90,7 +92,7 @@ def mamba_scan(x: jax.Array, dt: jax.Array, b: jax.Array, c: jax.Array,
         out_specs=pl.BlockSpec((1, chunk, bdi), lambda ib, idi, ic: (ib, ic, idi)),
         out_shape=jax.ShapeDtypeStruct((B, Sp, dip), x.dtype),
         scratch_shapes=[pltpu.VMEM((bdi, ds), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(xp, dtp, bp, cp, ap)
@@ -153,7 +155,7 @@ def rwkv_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
         out_specs=pl.BlockSpec((1, chunk, hd), lambda ib, ic: (ib, ic, 0)),
         out_shape=jax.ShapeDtypeStruct((B * H, Sp, hd), r.dtype),
         scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(rp, kp, vp, wp, jnp.tile(u, (B, 1)).reshape(B * H, hd))

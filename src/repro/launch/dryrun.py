@@ -45,12 +45,14 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 def build_jitted(arch: str, shape_name: str, mesh, *, microbatches: int = 1,
                  kv_chunk: int = 1024, paged: bool = False,
-                 page_size: int = 16):
+                 page_size: int = 16, use_kernel: bool = False):
     """Returns (jitted_fn, ordered_args_sds).  ``paged=True`` lowers the
     continuous-batching ENGINE step for decode shapes — paged block-pool
     caches, block table and per-slot sampling operands included — instead
-    of the plain dense decode step."""
-    paged = paged and INPUT_SHAPES[shape_name].kind == "decode"
+    of the plain dense decode step.  ``use_kernel=True`` (implies paged)
+    lowers the fused Pallas paged-decode attention inside that step."""
+    paged = (paged or use_kernel) and INPUT_SHAPES[shape_name].kind == "decode"
+    use_kernel = use_kernel and paged
     spec = input_specs(arch, shape_name, paged=paged, page_size=page_size)
     cfg, shape = spec["cfg"], spec["shape"]
     p_specs = param_specs(spec["params"], mesh)
@@ -100,7 +102,8 @@ def build_jitted(arch: str, shape_name: str, mesh, *, microbatches: int = 1,
             # the serving-engine step itself: paged pools + block table +
             # in-jit per-slot sampling.  Tokens arrive as a raw (B, 1)
             # array (the engine step has no batch dict).
-            fn = make_engine_step(cfg, kv_chunk=kv_chunk, paged=True)
+            fn = make_engine_step(cfg, kv_chunk=kv_chunk, paged=True,
+                                  use_kernel=use_kernel)
         else:
             fn = (make_prefill_step(cfg, kv_chunk=kv_chunk)
                   if shape.kind == "prefill"
@@ -115,15 +118,20 @@ def build_jitted(arch: str, shape_name: str, mesh, *, microbatches: int = 1,
                                               shard_batch=shard_b), mesh)["t"]
             tab_sh = to_shardings(batch_specs({"t": spec["table"]}, mesh,
                                               shard_batch=shard_b), mesh)["t"]
+            sm = spec["sampling"]
+            seen_sh = to_shardings(batch_specs({"t": sm["seen"]}, mesh,
+                                               shard_batch=shard_b),
+                                   mesh)["t"]
             rep = NamedSharding(mesh, P())
             jitted = jax.jit(fn,
-                             in_shardings=(p_sh, c_sh, tok_sh, pos_sh,
-                                           tab_sh, rep, rep, rep),
-                             out_shardings=(None, c_sh))
-            sm = spec["sampling"]
-            args = (spec["params"], spec["caches"], toks, spec["positions"],
-                    spec["table"], sm["rng_keys"], sm["temperature"],
-                    sm["top_p"])
+                             in_shardings=(p_sh, c_sh, seen_sh, tok_sh,
+                                           pos_sh, tab_sh, rep, rep, rep,
+                                           rep, rep),
+                             out_shardings=(None, c_sh, seen_sh))
+            args = (spec["params"], spec["caches"], sm["seen"], toks,
+                    spec["positions"], spec["table"], sm["rng_keys"],
+                    sm["temperature"], sm["top_p"], sm["top_k"],
+                    sm["rep_penalty"])
         else:
             jitted = jax.jit(fn,
                              in_shardings=(p_sh, c_sh, b_sh, pos_sh),
@@ -136,20 +144,24 @@ def build_jitted(arch: str, shape_name: str, mesh, *, microbatches: int = 1,
 def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             out_dir: Optional[str] = None, verbose: bool = True,
             microbatches: int = 1, kv_chunk: int = 1024,
-            paged: bool = False, page_size: int = 16) -> Dict:
+            paged: bool = False, page_size: int = 16,
+            use_kernel: bool = False) -> Dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
     chips = mesh.devices.size
     t0 = time.time()
     # build_jitted downgrades paged for non-decode shapes; record what is
     # actually lowered, not what was requested
-    paged = paged and INPUT_SHAPES[shape_name].kind == "decode"
+    paged = (paged or use_kernel) and INPUT_SHAPES[shape_name].kind == "decode"
+    use_kernel = use_kernel and paged
     rec: Dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
-                 "chips": chips, "status": "ok", "paged": bool(paged)}
+                 "chips": chips, "status": "ok", "paged": bool(paged),
+                 "kernel": bool(use_kernel)}
     try:
         jitted, args, cfg, shape = build_jitted(
             arch, shape_name, mesh, microbatches=microbatches,
-            kv_chunk=kv_chunk, paged=paged, page_size=page_size)
+            kv_chunk=kv_chunk, paged=paged, page_size=page_size,
+            use_kernel=use_kernel)
         lowered = jitted.lower(*args)
         t_lower = time.time() - t0
         compiled = lowered.compile()
@@ -242,6 +254,10 @@ def main():
     ap.add_argument("--paged", action="store_true",
                     help="decode shapes: lower the paged (block-table) "
                          "serving-engine step instead of the dense decode")
+    ap.add_argument("--kernel", action="store_true",
+                    help="decode shapes: lower the paged engine step with "
+                         "the fused Pallas paged-decode attention kernel "
+                         "(implies --paged)")
     ap.add_argument("--page-size", type=int, default=16)
     args = ap.parse_args()
 
@@ -250,7 +266,7 @@ def main():
         for arch, shape in pairs:
             run_one(arch, shape, multi_pod=args.multi_pod, out_dir=args.out,
                     microbatches=args.microbatches, paged=args.paged,
-                    page_size=args.page_size)
+                    page_size=args.page_size, use_kernel=args.kernel)
         for arch, shape, why in skips:
             print(f"[skip] {arch} × {shape}: {why}")
         return
@@ -262,7 +278,8 @@ def main():
         return
     run_one(args.arch, args.shape, multi_pod=args.multi_pod,
             out_dir=args.out, microbatches=args.microbatches,
-            paged=args.paged, page_size=args.page_size)
+            paged=args.paged, page_size=args.page_size,
+            use_kernel=args.kernel)
 
 
 if __name__ == "__main__":

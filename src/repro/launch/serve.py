@@ -11,8 +11,12 @@ cache memory is ceil((prompt + max_new) / page_size) pages from a shared
 ``--num-blocks`` pool instead of one worst-case ``cache_len`` per slot,
 and the queue backpressures when the pool is exhausted.  ``--no-paged``
 selects the dense per-slot ring caches (bitwise reference semantics).
-``--temperature``/``--top-p`` sample in-jit with per-slot PRNG streams
-(temperature 0 = greedy, bitwise-stable).
+``--temperature``/``--top-p``/``--top-k``/``--rep-penalty`` sample
+in-jit with per-slot PRNG streams (temperature 0 = greedy,
+bitwise-stable; the repetition penalty reads an in-jit per-slot
+seen-token mask).  ``--kernel`` decodes through the fused Pallas
+paged-attention kernel (block-table-driven page DMA) instead of the
+chunked-gather scan path.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b \
         --requests 8 --max-new 16 --slots 4 --chunk 16 --page-size 16
@@ -50,10 +54,20 @@ def main():
     ap.add_argument("--num-blocks", type=int, default=0,
                     help="pool size in pages; 0 = same memory as the dense "
                          "cache (slots * cache_len / page_size)")
+    ap.add_argument("--kernel", action="store_true",
+                    help="decode attention through the fused Pallas "
+                         "paged-decode kernel (paged mode only; interpret "
+                         "mode on CPU, Mosaic with REPRO_PALLAS_COMPILE=1)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="per-request sampling temperature (0 = greedy)")
     ap.add_argument("--top-p", type=float, default=1.0,
                     help="nucleus sampling mass (with --temperature > 0)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="sample only among the k highest-logit tokens "
+                         "(0 = no top-k cut; with --temperature > 0)")
+    ap.add_argument("--rep-penalty", type=float, default=1.0,
+                    help="CTRL-style repetition penalty on already-emitted "
+                         "tokens (1.0 = off; applies to greedy slots too)")
     ap.add_argument("--no-warmup", action="store_true",
                     help="skip ahead-of-traffic compilation of the two "
                          "engine shapes")
@@ -66,7 +80,7 @@ def main():
                            cache_len=args.cache_len, chunk=args.chunk,
                            paged=args.paged, page_size=args.page_size,
                            num_blocks=args.num_blocks or None,
-                           seed=args.seed)
+                           use_kernel=args.kernel, seed=args.seed)
     if not args.no_warmup:
         t0 = time.time()
         engine.warmup()
@@ -79,13 +93,15 @@ def main():
                                     cfg.vocab_size).tolist()
         engine.submit(Request(i, prompt, max_new=args.max_new,
                               temperature=args.temperature,
-                              top_p=args.top_p))
+                              top_p=args.top_p, top_k=args.top_k,
+                              rep_penalty=args.rep_penalty))
     t0 = time.time()
     done = engine.run()
     dt = time.time() - t0
     toks = sum(len(r.generated) for r in done)
     st = engine.stats
     mode = (f"paged:{engine.num_blocks}x{engine.page_size}"
+            + ("+kernel" if engine.use_kernel else "")
             if engine.paged else "dense")
     print(f"{cfg.name}: served {len(done)} requests, {toks} tokens in "
           f"{dt:.2f}s ({toks/dt:.1f} tok/s, slots={args.slots}, {mode})")

@@ -61,12 +61,16 @@ def block_table_sds(batch: int, cache_len: int, page_size: int):
     return SDS((batch, max(1, -(-cache_len // page_size))), jnp.int32)
 
 
-def sampling_sds(batch: int) -> Dict:
+def sampling_sds(cfg: ModelConfig, batch: int) -> Dict:
     """Per-slot sampling operands of the engine step: counter-based PRNG
-    key data plus temperature / top-p vectors."""
+    key data, temperature / top-p / top-k / repetition-penalty vectors,
+    and the (slots, vocab) seen-token mask the penalty reads."""
     return {"rng_keys": SDS((batch, 2), jnp.uint32),
             "temperature": SDS((batch,), jnp.float32),
-            "top_p": SDS((batch,), jnp.float32)}
+            "top_p": SDS((batch,), jnp.float32),
+            "top_k": SDS((batch,), jnp.int32),
+            "rep_penalty": SDS((batch,), jnp.float32),
+            "seen": SDS((batch, cfg.vocab_size), jnp.bool_)}
 
 
 def input_specs(arch: str, shape_name: str, *, paged: bool = False,
@@ -99,5 +103,5 @@ def input_specs(arch: str, shape_name: str, *, paged: bool = False,
         out["positions"] = positions_sds(B, 1)
         if paged:
             out["table"] = block_table_sds(B, S, page_size)
-            out["sampling"] = sampling_sds(B)
+            out["sampling"] = sampling_sds(cfg, B)
     return out

@@ -88,7 +88,8 @@ def attention(q: Array, k: Array, v: Array, q_pos: Array, kv_pos: Array, *,
               kv_chunk: int = 1024, scale: Optional[float] = None,
               q_extra: Optional[Array] = None,
               k_extra: Optional[Array] = None,
-              table: Optional[Array] = None) -> Array:
+              table: Optional[Array] = None,
+              use_kernel: bool = False) -> Array:
     """Flash-style attention.
 
     q: (B, S, Hq, D); k: (B, T, Hkv, D); v: (B, T, Hkv, Dv) (Dv may differ,
@@ -112,6 +113,15 @@ def attention(q: Array, k: Array, v: Array, q_pos: Array, kv_pos: Array, *,
     identical to the dense path — unallocated or unwritten entries carry
     position -1 and contribute exactly-zero probability mass.
 
+    ``use_kernel=True`` dispatches paged single-token decode (``table``
+    given, S == 1, causal) to the fused Pallas kernel
+    (``repro.kernels.paged_attention``): the block table is
+    scalar-prefetched and drives the page DMA, so the per-chunk
+    ``pool[safe_table]`` gather below — which materializes a
+    (B, C, Hkv, D) K/V copy in HBM every online-softmax step — never
+    happens.  All other shapes (prefill chunks, dense caches) keep this
+    scan path, which remains the reference semantics.
+
     Returns (B, S, Hq, Dv) in q.dtype; accumulation in float32.
     """
     B, S, Hq, D = q.shape
@@ -121,6 +131,12 @@ def attention(q: Array, k: Array, v: Array, q_pos: Array, kv_pos: Array, *,
     G = Hq // Hkv
     if scale is None:
         scale = D ** -0.5
+    if use_kernel and table is not None and S == 1 and causal:
+        from repro.kernels import ops
+        return ops.paged_attention(q, k, v, kv_pos, table, q_pos,
+                                   scale=scale, window=window,
+                                   softcap=softcap, q_extra=q_extra,
+                                   k_extra=k_extra)
     qf = q.astype(jnp.float32).reshape(B, S, Hkv, G, D) * scale
     qe = None
     if q_extra is not None:
@@ -240,7 +256,7 @@ def swa_ring_blocks(window: int, page_size: int, n_cols: int) -> int:
 def attn_apply(p: dict, x: Array, cfg, *, positions: Array,
                cache: Optional[dict] = None, window: int = 0,
                kv_chunk: int = 1024, masked_slots: bool = False,
-               table: Optional[Array] = None):
+               table: Optional[Array] = None, use_kernel: bool = False):
     """x: (B,S,d). cache (decode): {"k","v": (B,T,Hkv,D), "pos": (B,T)},
     or a paged pool {"k","v": (N,page,Hkv,D), "pos": (N,page)} when a
     (B, n_cols) block ``table`` is given — writes scatter through the
@@ -327,7 +343,7 @@ def attn_apply(p: dict, x: Array, cfg, *, positions: Array,
         kv_pos = positions
     out = attention(q, k, v, positions, kv_pos, window=window,
                     softcap=cfg.logits_softcap, kv_chunk=kv_chunk,
-                    table=attn_table)
+                    table=attn_table, use_kernel=use_kernel)
     return row_dot(out.reshape(B, S, hq * hd), p["wo"]), new_cache
 
 

@@ -83,14 +83,18 @@ def _project_kv_latent(p, x, cfg, positions):
 def mla_apply(p: dict, x: Array, cfg, *, positions: Array,
               cache: Optional[dict] = None, decode: bool = False,
               kv_chunk: int = 1024, masked_slots: bool = False,
-              table: Optional[Array] = None):
+              table: Optional[Array] = None, use_kernel: bool = False):
     """MLA block.  Returns (out, new_cache).  ``masked_slots=True``
     selects the per-row masked cache write (continuous-batching chunked
     prefill: rows with position -1 are write no-ops).  When a (B, n_cols)
     block ``table`` is given the cache is a paged latent pool: writes
     scatter through the table; the absorbed decode path attends the pool
     page-wise, the naive prefill path gathers the dense latent view
-    (it decompresses the whole cache anyway)."""
+    (it decompresses the whole cache anyway).  ``use_kernel=True`` runs
+    paged absorbed decode through the fused Pallas paged-attention
+    kernel — the latent pool is both K and V, the rope pool enters as
+    the second score contraction, all walked page-wise via the
+    scalar-prefetched block table."""
     B, S, d = x.shape
     H = cfg.n_heads
     dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
@@ -153,7 +157,8 @@ def mla_apply(p: dict, x: Array, cfg, *, positions: Array,
                           scale=scale, kv_chunk=kv_chunk,
                           q_extra=q_rope_c,
                           k_extra=krope_all[:, :, None, :],
-                          table=attn_table)                      # (B,S,H,kr)
+                          table=attn_table,
+                          use_kernel=use_kernel)                 # (B,S,H,kr)
         wv_b = p["wv_b"].astype(x.dtype).reshape(kr, H, dv)
         o = jnp.einsum("bshk,khd->bshd", o_lat, wv_b)
     else:

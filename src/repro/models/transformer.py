@@ -78,7 +78,8 @@ def layer_cache_init(spec, cfg: ModelConfig, batch: int, cache_len: int,
 def layer_apply(lp: dict, spec, cfg: ModelConfig, x: Array, positions: Array,
                 cache: Optional[dict], *, decode: bool = False,
                 kv_chunk: int = 1024, masked_slots: bool = False,
-                block_table: Optional[Array] = None):
+                block_table: Optional[Array] = None,
+                use_kernel: bool = False):
     """Returns (x, new_cache, aux_loss).
 
     ``masked_slots``: batch rows whose positions are all < 0 (idle serving
@@ -91,6 +92,10 @@ def layer_apply(lp: dict, spec, cfg: ModelConfig, x: Array, positions: Array,
     ``block_table``: (B, n_cols) int32 page table for paged caches —
     consumed by the attention-family mixers only; recurrent state is
     per-slot and ignores it.
+
+    ``use_kernel``: paged single-token decode runs the fused Pallas
+    paged-attention kernel instead of the chunked-gather scan path
+    (attention-family mixers only; a no-op for every other shape).
     """
     x = constrain(x, "residual")
     h = rmsnorm(x, lp["norm1"], cfg.norm_eps)
@@ -101,13 +106,15 @@ def layer_apply(lp: dict, spec, cfg: ModelConfig, x: Array, positions: Array,
                                          cache=cache, decode=decode,
                                          kv_chunk=kv_chunk,
                                          masked_slots=masked_slots,
-                                         table=block_table)
+                                         table=block_table,
+                                         use_kernel=use_kernel)
         else:
             h, new_cache = attn_apply(lp["mixer"], h, cfg, positions=positions,
                                       cache=cache, window=window,
                                       kv_chunk=kv_chunk,
                                       masked_slots=masked_slots,
-                                      table=block_table)
+                                      table=block_table,
+                                      use_kernel=use_kernel)
     elif spec.mixer == MAMBA:
         h, new_cache = ssm.mamba_apply(lp["mixer"], h, cfg, cache=cache)
     elif spec.mixer == RWKV:
@@ -231,14 +238,17 @@ def forward(params: dict, cfg: ModelConfig, batch: dict, *,
             caches: Optional[dict] = None, positions: Optional[Array] = None,
             decode: bool = False, remat: bool = False, kv_chunk: int = 1024,
             compute_logits: bool = True, masked_slots: bool = False,
-            remat_policy: str = "full", block_table: Optional[Array] = None):
+            remat_policy: str = "full", block_table: Optional[Array] = None,
+            use_kernel: bool = False):
     """Run the decoder.
 
     Returns (logits_or_hidden, aux_loss, new_caches).  ``positions``
     defaults to arange(S) broadcast over batch.  ``decode=True`` selects
     single-token cache paths (absorbed MLA etc.).  ``block_table`` marks
     ``caches`` as paged pools (see ``init_cache(paged=True)``) and routes
-    every attention-family cache access through the page table.
+    every attention-family cache access through the page table;
+    ``use_kernel=True`` additionally runs paged single-token decode
+    attention through the fused Pallas kernel.
     """
     x = embed_inputs(params, cfg, batch)
     B, S, _ = x.shape
@@ -253,7 +263,8 @@ def forward(params: dict, cfg: ModelConfig, batch: dict, *,
         x, nc, a = layer_apply(params["prefix"][i], spec, cfg, x, positions, c,
                                decode=decode, kv_chunk=kv_chunk,
                                masked_slots=masked_slots,
-                               block_table=block_table)
+                               block_table=block_table,
+                               use_kernel=use_kernel)
         aux += a
         if caches is not None:
             new_caches.setdefault("prefix", []).append(nc)
@@ -269,7 +280,8 @@ def forward(params: dict, cfg: ModelConfig, batch: dict, *,
                                        pc[j] if pc is not None else None,
                                        decode=decode, kv_chunk=kv_chunk,
                                        masked_slots=masked_slots,
-                                       block_table=block_table)
+                                       block_table=block_table,
+                                       use_kernel=use_kernel)
                 ncs.append(nc)
                 a_tot += a
             return x, tuple(ncs), a_tot

@@ -58,31 +58,54 @@ def make_decode_step(cfg: ModelConfig, *, kv_chunk: int = 1024) -> Callable:
 
 
 def topp_sample(keys: Array, logits: Array, temperature: Array,
-                top_p: Array) -> Array:
-    """Per-row temperature + nucleus sampling, fully in-jit.
+                top_p: Array, top_k: Optional[Array] = None) -> Array:
+    """Per-row temperature + nucleus (+ optional top-k) sampling, fully
+    in-jit.
 
     keys: (B, 2) uint32 raw threefry key data; logits: (B, V) float32;
-    temperature / top_p: (B,) float32.  Rows are sampled independently
-    (vmapped categorical) from the smallest prefix of the sorted
-    distribution whose mass reaches top_p (the top token always stays, so
-    top_p -> 0 degenerates to greedy).  Returns (B, 1) int32.
+    temperature / top_p: (B,) float32; top_k: (B,) int32, 0 = no top-k
+    limit.  Rows are sampled independently (vmapped categorical) from
+    the smallest prefix of the sorted distribution whose mass reaches
+    top_p, intersected with the top_k highest-logit tokens (the top
+    token always stays, so top_p -> 0 or top_k == 1 degenerates to
+    greedy).  Returns (B, 1) int32.
     """
+    V = logits.shape[-1]
     lg = logits / jnp.maximum(temperature, 1e-6)[:, None]
     order = jnp.argsort(-lg, axis=-1)
     slg = jnp.take_along_axis(lg, order, axis=-1)
     probs = jax.nn.softmax(slg, axis=-1)
     cum = jnp.cumsum(probs, axis=-1)
     keep = (cum - probs) < top_p[:, None]          # top-1 always kept
+    if top_k is not None:
+        k_eff = jnp.where(top_k > 0, top_k, V)     # 0 disables the cut
+        keep &= jnp.arange(V, dtype=jnp.int32)[None, :] < k_eff[:, None]
     slg = jnp.where(keep, slg, NEG_INF)
     idx = jax.vmap(jax.random.categorical)(keys, slg)            # (B,)
     return jnp.take_along_axis(order, idx[:, None], axis=-1).astype(jnp.int32)
 
 
+def apply_repetition_penalty(logits: Array, seen: Array,
+                             rep_penalty: Array) -> Array:
+    """CTRL-style repetition penalty, per row: logits of tokens the row
+    has already seen (prompt + generated so far) are divided by the
+    penalty when positive and multiplied when negative, discouraging
+    re-emission.  logits: (B, V) f32; seen: (B, V) bool;
+    rep_penalty: (B,) f32, 1.0 = off.  Rows with penalty 1.0 are
+    returned bitwise-untouched (the ``where`` keeps the original
+    values), so default slots never drift."""
+    pen = rep_penalty[:, None]
+    scaled = jnp.where(logits > 0, logits / pen, logits * pen)
+    return jnp.where(seen & (pen != 1.0), scaled, logits)
+
+
 def make_engine_step(cfg: ModelConfig, *, kv_chunk: int = 1024,
-                     paged: bool = False) -> Callable:
-    """(params, caches, tokens (B,S), positions (B,S), table (B,n_cols),
-    rng_keys (B,2) uint32, temperature (B,), top_p (B,)) ->
-    (next-token ids (B,1) int32, caches).
+                     paged: bool = False,
+                     use_kernel: bool = False) -> Callable:
+    """(params, caches, seen (B,V) bool, tokens (B,S), positions (B,S),
+    table (B,n_cols), rng_keys (B,2) uint32, temperature (B,), top_p
+    (B,), top_k (B,) int32, rep_penalty (B,)) ->
+    (next-token ids (B,1) int32, caches, seen).
 
     The one step function behind the continuous batcher: the SAME jitted
     callable serves chunked prefill (S = chunk) and the batched decode
@@ -92,33 +115,60 @@ def make_engine_step(cfg: ModelConfig, *, kv_chunk: int = 1024,
     unembedded (the engine never consumes mid-chunk logits) and token
     selection happens inside the jit — greedy argmax for slots with
     temperature 0 (bitwise-identical to the greedy-only engine),
-    per-slot temperature/top-p via a (B, 2) PRNG-key array otherwise —
-    so one (slots, vocab) matmul and (B, 1) token ids are all that leave
-    the step, never (B, S, V) logits.
+    per-slot temperature/top-p/top-k via a (B, 2) PRNG-key array
+    otherwise — so one (slots, vocab) matmul and (B, 1) token ids are
+    all that leave the step, never (B, S, V) logits.
+
+    ``seen`` is the per-slot already-emitted-token mask, maintained
+    in-jit: the step scatters its valid input tokens (prompt chunks and
+    fed-back decode tokens alike) before selection, so repetition
+    penalty (``rep_penalty`` != 1, CTRL-style) sees prompt + generation
+    so far without any (B, V) traffic leaving the device.  The scatter,
+    the penalty and the sampling branch are all ``lax.cond``-gated on
+    the same predicates, so the all-default steady state pays for none
+    of them.  (Gating the scatter is sound: a slot's mask is only ever
+    read while its penalty != 1, a request's penalty is fixed for its
+    lifetime — so every step of a penalized request runs with the cond
+    on — and the mask is cleared host-side at admission.)
 
     ``paged=True`` routes every attention-family cache access through the
     block ``table`` (dense engines pass a dummy, which the forward
-    ignores).
+    ignores); ``use_kernel=True`` additionally dispatches paged S=1
+    decode attention to the fused Pallas paged-decode kernel (the block
+    table drives the page DMA — no gathered K/V copy in HBM).
     """
-    def engine_step(params, caches, tokens, positions, table, rng_keys,
-                    temperature, top_p):
+    def engine_step(params, caches, seen, tokens, positions, table,
+                    rng_keys, temperature, top_p, top_k, rep_penalty):
+        B = tokens.shape[0]
+        rows = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[:, None],
+                                tokens.shape)
+        seen = jax.lax.cond(
+            jnp.any(rep_penalty != 1.0),
+            lambda sn: sn.at[rows, tokens].max(positions >= 0),
+            lambda sn: sn, seen)
         h, _, caches = forward(params, cfg, {"tokens": tokens},
                                caches=caches, positions=positions,
                                decode=tokens.shape[1] == 1,
                                kv_chunk=kv_chunk, compute_logits=False,
                                masked_slots=True,
-                               block_table=table if paged else None)
+                               block_table=table if paged else None,
+                               use_kernel=use_kernel)
         logits = unembed(params, cfg, h[:, -1:, :])              # (B,1,V)
-        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        # lax.cond so the all-greedy steady state (the default) never pays
-        # the vocab sort/softmax of the sampling branch at runtime
+        lg = logits[:, 0, :]
+        # both conds keep the all-default steady state on the cheap path:
+        # no (B, V) where-rewrite, no vocab sort/softmax at runtime
+        lg = jax.lax.cond(
+            jnp.any(rep_penalty != 1.0),
+            lambda l: apply_repetition_penalty(l, seen, rep_penalty),
+            lambda l: l, lg)
+        greedy = jnp.argmax(lg, axis=-1)[:, None].astype(jnp.int32)
         tok = jax.lax.cond(
             jnp.any(temperature > 0.0),
             lambda: jnp.where(temperature[:, None] > 0.0,
-                              topp_sample(rng_keys, logits[:, 0, :],
-                                          temperature, top_p), greedy),
+                              topp_sample(rng_keys, lg, temperature,
+                                          top_p, top_k), greedy),
             lambda: greedy)
-        return tok, caches
+        return tok, caches, seen
     return engine_step
 
 
@@ -169,6 +219,8 @@ class Request:
     max_new: int
     temperature: float = 0.0     # 0 -> greedy (bitwise-stable default)
     top_p: float = 1.0
+    top_k: int = 0               # 0 -> no top-k cut
+    rep_penalty: float = 1.0     # 1.0 -> no repetition penalty
     generated: List[int] = field(default_factory=list)
     pending: int = -1            # next token to feed/emit
     done: bool = False
@@ -297,11 +349,22 @@ class ServingEngine:
     ``paged=False`` selects the dense per-slot ring caches, which remain
     the bitwise reference semantics.
 
+    **Kernel mode** (``use_kernel=True``, paged engines only): the S=1
+    decode tick dispatches attention to the fused Pallas paged-decode
+    kernel (``repro.kernels.paged_attention``) — the block table is
+    scalar-prefetched and drives the page DMA, so the per-chunk
+    gathered K/V copy of the scan path never lands in HBM.  Chunked
+    prefill keeps the scan path (reference semantics) either way.
+
     Sampling is per-slot and in-jit: requests carry ``temperature`` /
-    ``top_p``; greedy (temperature 0) slots take the argmax path,
-    bitwise-identical to the greedy-only engine, and sampled slots use a
-    counter-based per-slot PRNG key threaded through the step as a
-    ``(slots, 2)`` uint32 array — full logits never leave the device.
+    ``top_p`` / ``top_k`` / ``rep_penalty``; greedy (temperature 0,
+    penalty 1) slots take the argmax path, bitwise-identical to the
+    greedy-only engine, and sampled slots use a counter-based per-slot
+    PRNG key threaded through the step as a ``(slots, 2)`` uint32 array
+    — full logits never leave the device.  Repetition penalty reads a
+    per-slot ``(slots, vocab)`` seen-token mask maintained in-jit from
+    the step's own input tokens (prompt chunks and fed-back decode
+    tokens), cleared host-side on admission.
 
     Per-slot positions keep the shared batched cache consistent; idle
     slots step with position -1, which every cache kind treats as a
@@ -319,7 +382,7 @@ class ServingEngine:
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
                  cache_len: int = 512, chunk: int = 32, paged: bool = False,
                  page_size: int = 16, num_blocks: Optional[int] = None,
-                 seed: int = 0):
+                 use_kernel: bool = False, seed: int = 0):
         self.params = params
         self.cfg = cfg
         self.slots = slots
@@ -327,6 +390,12 @@ class ServingEngine:
         self.chunk = max(1, min(chunk, cache_len))
         self.paged = paged
         self.page_size = page_size
+        if use_kernel and not paged:
+            raise ValueError(
+                "ServingEngine: use_kernel=True requires paged=True — the "
+                "fused paged-decode kernel reads the block-table pool "
+                "(dense rings keep the scan path)")
+        self.use_kernel = use_kernel
         # full (non-windowed) attention layers must never wrap the ring:
         # every position of prompt + generation needs a live cache entry.
         # SWA rings may wrap freely — chunked prefill attends over
@@ -354,11 +423,16 @@ class ServingEngine:
             self.caches = init_cache(cfg, slots, cache_len)
         # buffer donation is a no-op on CPU and would only warn
         donate = jax.default_backend() != "cpu"
-        dn = dict(donate_argnums=(1,)) if donate else {}
+        dn = dict(donate_argnums=(1, 2)) if donate else {}
         d0 = dict(donate_argnums=(0,)) if donate else {}
-        self._step_fn = jax.jit(make_engine_step(cfg, paged=paged), **dn)
+        self._step_fn = jax.jit(
+            make_engine_step(cfg, paged=paged,
+                             use_kernel=self.use_kernel), **dn)
         self._reset_fn = jax.jit(partial(_clear_slot, skip_pools=paged), **d0)
         self._clear_blocks_fn = jax.jit(_clear_blocks, **d0)
+        self._clear_seen_fn = jax.jit(
+            lambda seen, s: seen.at[s].set(False), **d0)
+        self._seen = jnp.zeros((slots, cfg.vocab_size), jnp.bool_)
         self.active: List[Optional[Request]] = [None] * slots
         self.positions = [0] * slots
         self.queue: List[Request] = []
@@ -369,6 +443,8 @@ class ServingEngine:
         self._step_seq = 0
         self._temp = np.zeros((slots,), np.float32)
         self._topp = np.ones((slots,), np.float32)
+        self._topk = np.zeros((slots,), np.int32)
+        self._reppen = np.ones((slots,), np.float32)
 
     # -- paged-pool bookkeeping (host side) -----------------------------
 
@@ -485,10 +561,12 @@ class ServingEngine:
                                dtype=np.uint32)
         keys[:, 1] = np.uint32(self._step_seq)
         self._step_seq += 1
-        return self._step_fn(self.params, self.caches, jnp.asarray(toks),
-                             jnp.asarray(pos), jnp.asarray(self._table),
-                             jnp.asarray(keys), jnp.asarray(self._temp),
-                             jnp.asarray(self._topp))
+        nxt, self.caches, self._seen = self._step_fn(
+            self.params, self.caches, self._seen, jnp.asarray(toks),
+            jnp.asarray(pos), jnp.asarray(self._table), jnp.asarray(keys),
+            jnp.asarray(self._temp), jnp.asarray(self._topp),
+            jnp.asarray(self._topk), jnp.asarray(self._reppen))
+        return nxt, self.caches
 
     def _admit(self) -> None:
         """Chunked-prefill admission: reserve the request's worst-case
@@ -509,8 +587,11 @@ class ServingEngine:
                 self.queue.pop(0)
                 self.active[s] = req
                 self.caches = self._reset_fn(self.caches, s)
+                self._seen = self._clear_seen_fn(self._seen, s)
                 self._temp[s] = req.temperature
                 self._topp[s] = req.top_p
+                self._topk[s] = req.top_k
+                self._reppen[s] = req.rep_penalty
                 prompt = np.asarray(req.prompt, np.int32)
                 S = len(req.prompt)
                 nxt = None
@@ -555,9 +636,11 @@ class ServingEngine:
                 self.active[s] = None
                 self._free_slot_blocks(s)
                 # back to greedy defaults so an idle slot can't keep the
-                # all-greedy sampling fast path (lax.cond) switched off
+                # all-greedy/no-penalty fast paths (lax.cond) switched off
                 self._temp[s] = 0.0
                 self._topp[s] = 1.0
+                self._topk[s] = 0
+                self._reppen[s] = 1.0
         return len(act)
 
     def run(self, max_ticks: int = 10_000) -> List[Request]:

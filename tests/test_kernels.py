@@ -22,8 +22,6 @@ def _tol(dtype):
      (2, 4, 1, 37, 80, 16),     # odd sizes + window (padding paths)
      (1, 2, 2, 192, 64, 64),    # sliding window
      (1, 16, 4, 48, 256, 0)])   # wide heads (gemma3-style)
-@pytest.mark.xfail(jax.default_backend() == "cpu", strict=False,
-                   reason="known seed failure: Pallas kernel parity on CPU interpret (ROADMAP 'Known seed failures'); not serving-related")
 def test_flash_attention_vs_ref(B, Hq, Hkv, S, D, window, dtype):
     ks = jax.random.split(KEY, 3)
     q = jax.random.normal(ks[0], (B, Hq, S, D), dtype)
@@ -55,8 +53,6 @@ def test_int8_quant_roundtrip(n, dtype):
                           (2, 96, 192, 16, 32, 64),
                           (1, 50, 48, 4, 64, 128)])  # non-divisible pads
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-@pytest.mark.xfail(jax.default_backend() == "cpu", strict=False,
-                   reason="known seed failure: Pallas kernel parity on CPU interpret (ROADMAP 'Known seed failures'); not serving-related")
 def test_mamba_scan_vs_ref(B, S, di, ds, chunk, dib, dtype):
     ks = jax.random.split(KEY, 5)
     x = (jax.random.normal(ks[0], (B, S, di), jnp.float32) * 0.5).astype(dtype)
@@ -75,8 +71,6 @@ def test_mamba_scan_vs_ref(B, S, di, ds, chunk, dib, dtype):
                                             (2, 64, 3, 16, 16),
                                             (1, 40, 1, 32, 64)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-@pytest.mark.xfail(jax.default_backend() == "cpu", strict=False,
-                   reason="known seed failure: Pallas kernel parity on CPU interpret (ROADMAP 'Known seed failures'); not serving-related")
 def test_rwkv_scan_vs_ref(B, S, H, hd, chunk, dtype):
     ks = jax.random.split(KEY, 5)
     r, k, v = [jax.random.normal(kk, (B, S, H, hd), dtype)
@@ -90,8 +84,6 @@ def test_rwkv_scan_vs_ref(B, S, H, hd, chunk, dtype):
                                atol=10 * _tol(dtype), rtol=10 * _tol(dtype))
 
 
-@pytest.mark.xfail(jax.default_backend() == "cpu", strict=False,
-                   reason="known seed failure: Pallas kernel parity on CPU interpret (ROADMAP 'Known seed failures'); not serving-related")
 def test_model_attention_matches_kernel():
     """The model's blocked jnp attention and the Pallas kernel agree (the
     model path is the production fallback on non-TPU hosts)."""

@@ -173,9 +173,9 @@ def test_admission_call_count(S, chunk):
     eng = ServingEngine(params, cfg, slots=2, cache_len=64, chunk=chunk)
     calls = []
     orig = eng._step_fn
-    def counting(p, c, toks, pos, *rest):
+    def counting(p, c, seen, toks, pos, *rest):
         calls.append(tuple(toks.shape))
-        return orig(p, c, toks, pos, *rest)
+        return orig(p, c, seen, toks, pos, *rest)
     eng._step_fn = counting
     eng.submit(Request(0, list(range(1, S + 1)), max_new=2))
     eng._admit()
