@@ -5,8 +5,10 @@ closed-form vs simulator agreement.
 ``engine_bench`` additionally writes the machine-readable perf
 trajectory ``BENCH_engine.json`` at the repo root (decode tok/s dense
 vs paged vs paged-kernel, admission latency, peak concurrency at equal
-cache memory, per-tick HBM bytes kernel vs gather) — CI uploads it as
-an artifact so the trajectory accumulates across PRs."""
+cache memory, per-tick HBM bytes kernel vs gather, and the broker-routed
+``fleet`` section: placement skew across heterogeneous simulated devices
++ fleet-vs-single-engine throughput) — CI uploads it as an artifact so
+the trajectory accumulates across PRs."""
 from __future__ import annotations
 
 import json
@@ -126,6 +128,7 @@ def engine_bench() -> List[dict]:
                  "derived": f"{us_tick / slots:.0f}us_per_slot_token"})
     rows.extend(paged_engine_bench(params, cfg, summary))
     rows.extend(paged_kernel_bench(summary))
+    rows.extend(fleet_bench(summary))
     with open(BENCH_JSON, "w") as f:
         json.dump(summary, f, indent=1, default=float)
     rows.append({"name": "engine/bench_json", "us_per_call": "",
@@ -279,6 +282,96 @@ def paged_kernel_bench(summary: Optional[dict] = None) -> List[dict]:
                      "derived": f"hbm{gather_bytes/kernel_bytes:.1f}x_"
                                 f"less_gather{us_g:.0f}us"})
     return rows
+
+
+def fleet_bench(summary: Optional[dict] = None) -> List[dict]:
+    """Broker-routed fleet vs a single engine on a uniform workload.
+
+    Two replicas on heterogeneous simulated devices (rtx4090 vs rtx3080)
+    behind one FIFO queue: Eq. 2 placement must skew STRICTLY toward the
+    faster device (asserted — requests served proportional to
+    ``DEVICE_CATALOG`` speeds), and the fleet's wall-clock throughput is
+    reported against a single engine of the same per-replica size
+    serving the whole workload.  Standalone runs merge the ``fleet``
+    section into the existing ``BENCH_engine.json``; under
+    ``engine_bench`` the caller owns the write."""
+    import dataclasses
+
+    from repro.configs import get_smoke_config
+    from repro.models.transformer import init_params
+    from repro.serve.engine import Request, ServingEngine
+    from repro.serve.router import FleetRouter, sim_node
+
+    standalone = summary is None
+    if standalone:
+        summary = {}
+        if os.path.exists(BENCH_JSON):
+            with open(BENCH_JSON) as f:
+                summary = json.load(f)
+    cfg = dataclasses.replace(get_smoke_config("gpt3-24l"), vocab_size=128,
+                              d_model=128, d_ff=256, n_heads=4, n_kv_heads=4,
+                              head_dim=32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    n_req = 12
+    reqs = [(list(range(1, 9)), 8) for _ in range(n_req)]   # uniform
+
+    def engine():
+        return ServingEngine(params, cfg, slots=2, cache_len=64, chunk=8,
+                             paged=True, page_size=16)
+
+    # single-engine baseline: one replica-sized engine takes everything
+    single = engine()
+    single.warmup()
+    for i, (p, mn) in enumerate(reqs):
+        single.submit(Request(i, p, max_new=mn))
+    t0 = time.perf_counter()
+    single.run()
+    jax.block_until_ready(single.caches)
+    single_s = time.perf_counter() - t0
+
+    router = FleetRouter([(engine(), sim_node("rtx4090")),
+                          (engine(), sim_node("rtx3080"))])
+    for rep in router.replicas:
+        rep.engine.warmup()
+    for i, (p, mn) in enumerate(reqs):
+        router.submit(Request(i, p, max_new=mn))
+    t0 = time.perf_counter()
+    done = router.run()
+    for rep in router.replicas:
+        jax.block_until_ready(rep.engine.caches)
+    fleet_s = time.perf_counter() - t0
+
+    assert len(done) == n_req, (len(done), n_req)
+    fast, slow = router.replicas
+    assert fast.node.speed > slow.node.speed
+    assert len(fast.served) > len(slow.served) > 0, (
+        f"Eq. 2 placement must skew toward the faster simulated device "
+        f"on a uniform workload, with BOTH devices participating: "
+        f"rtx4090 served {len(fast.served)} vs rtx3080 {len(slow.served)}")
+    toks = sum(len(r.generated) for r in done)
+    summary["fleet"] = {
+        "replicas": [{"device": rep.node.device.name,
+                      "speed_flops": rep.node.speed,
+                      "served": len(rep.served)}
+                     for rep in router.replicas],
+        "requests": n_req,
+        "placement_skew": len(fast.served) / len(slow.served),
+        "speed_ratio": fast.node.speed / slow.node.speed,
+        "fleet_tok_s": toks / fleet_s,
+        "single_engine_tok_s": toks / single_s,
+        "throughput_vs_single": single_s / fleet_s,
+        "held_ticks": router.stats["held"],
+    }
+    if standalone:
+        with open(BENCH_JSON, "w") as f:
+            json.dump(summary, f, indent=1, default=float)
+    return [{"name": "fleet/placement_skew_rtx4090_vs_rtx3080",
+             "us_per_call": fleet_s / max(1, toks) * 1e6,
+             "derived": f"served{len(fast.served)}vs{len(slow.served)}_"
+                        f"speed{fast.node.speed / slow.node.speed:.2f}x"},
+            {"name": "fleet/throughput_vs_single_engine",
+             "us_per_call": single_s / max(1, toks) * 1e6,
+             "derived": f"{single_s / fleet_s:.2f}x_2replicas"}]
 
 
 def scheduler_bench() -> List[dict]:

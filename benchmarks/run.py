@@ -34,7 +34,10 @@ def main() -> None:
         ("table1", figures.table1_cost),
         ("claims", figures.paper_claims_check),
         ("kernels", micro.kernel_bench),
-        ("engine", micro.engine_bench),
+        ("engine", micro.engine_bench),   # includes the fleet section
+        # explicit-only (via --only fleet): engine_bench already runs it,
+        # so a no-filter run must not repeat the whole fleet workload
+        ("fleet:only", micro.fleet_bench),
         ("scheduler", micro.scheduler_bench),
         ("compression", micro.compression_bench),
         ("pipeline", micro.pipeline_bench),
@@ -42,7 +45,10 @@ def main() -> None:
     print("name,us_per_call,derived")
     failures = 0
     for tag, fn in suites:
-        if args.only and args.only not in tag:
+        explicit_only = tag.endswith(":only")
+        tag = tag.removesuffix(":only")
+        if (args.only and args.only not in tag) or \
+                (not args.only and explicit_only):
             continue
         try:
             _emit(fn())

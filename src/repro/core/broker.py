@@ -39,6 +39,10 @@ class Broker:
                  heartbeat_s: float = 10.0):
         self.active: Dict[int, CompNode] = {}
         self.backup: Dict[int, CompNode] = {}
+        # node_id -> FLOP/s, recorded at registration and kept after the
+        # node dies: replacement drafting matches the DEAD node's speed,
+        # and by then the node object is already popped from the pools.
+        self.speeds: Dict[int, float] = {}
         self.backup_fraction = backup_fraction
         self.heartbeat_s = heartbeat_s
         self.rng = np.random.RandomState(seed)
@@ -53,13 +57,26 @@ class Broker:
     # ------------------------------------------------------------------
     # membership (P1: autonomous join/quit)
     # ------------------------------------------------------------------
-    def register(self, node: CompNode) -> int:
+    def register(self, node: CompNode, pool: str = "auto") -> int:
+        """Register a provider.  ``pool`` is ``"auto"`` (keep roughly
+        ``backup_fraction`` of the fleet in reserve), or an explicit
+        ``"active"`` / ``"backup"`` for callers that manage their own
+        replica/standby split (e.g. the serving ``FleetRouter``)."""
+        if pool not in ("auto", "active", "backup"):
+            raise ValueError(f"Broker.register: unknown pool {pool!r} "
+                             f"(expected 'auto', 'active' or 'backup')")
+        if node.node_id in self.active or node.node_id in self.backup:
+            raise ValueError(
+                f"Broker.register: node object already registered as "
+                f"{node.node_id} — each provider needs its own CompNode")
         node.node_id = self._next_id
         self._next_id += 1
+        self.speeds[node.node_id] = node.speed
         n_active = len(self.active)
         n_backup = len(self.backup)
-        # keep roughly backup_fraction of the fleet in reserve
-        if n_active > 0 and n_backup < self.backup_fraction * (n_active + n_backup + 1):
+        if pool == "backup" or (
+                pool == "auto" and n_active > 0
+                and n_backup < self.backup_fraction * (n_active + n_backup + 1)):
             self.backup[node.node_id] = node
             kind = "backup"
         else:
@@ -75,6 +92,9 @@ class Broker:
             return
         node.online = False
         self.dht.leave(node_id)
+        if self.schedule is not None:
+            # a corpse must not count toward makespan
+            self.schedule.loads.pop(node_id, None)
         self.events.append(Event(self._t, "quit", node_id,
                                  "graceful" if graceful else "failure"))
         if self._unfinished_on(node_id):
@@ -108,33 +128,71 @@ class Broker:
     # ------------------------------------------------------------------
     # fault tolerance: heartbeat + backup-pool replacement
     # ------------------------------------------------------------------
+    def activate_backup(self, node_id: int, detail: str = "") -> Optional[CompNode]:
+        """Move one SPECIFIC backup into the active pool (drafted by a
+        caller that chose it for its own reason, e.g. the serving router
+        activating the only standby whose model can run a request)."""
+        sub = self.backup.pop(node_id, None)
+        if sub is None:
+            return None
+        self.active[sub.node_id] = sub
+        self.dht.join(sub.node_id)
+        self.events.append(Event(self._t, "replace", sub.node_id,
+                                 detail or "drafted"))
+        self.dht.rebalance()
+        return sub
+
+    def draft_backup(self, dead_id: int) -> Optional[CompNode]:
+        """Draft the backup whose SPEED (FLOP/s) best matches the dead
+        node's recorded speed — the drafted peer inherits the dead one's
+        role, so matching on throughput keeps the schedule balanced.
+        (The dead node is already popped from the pools; ``self.speeds``
+        keeps its registration-time speed.)  Returns the activated node,
+        or None when the backup pool is empty."""
+        if not self.backup:
+            return None
+        dead_speed = self.speeds.get(dead_id, 1.0)
+        sub_id = min(self.backup,
+                     key=lambda nid: abs(self.backup[nid].speed - dead_speed))
+        return self.activate_backup(sub_id, f"for {dead_id}")
+
     def _replace(self, dead_id: int) -> Optional[int]:
         pending = self._unfinished_on(dead_id)
         if not pending:
             return None
-        dead_speed = (self.schedule.loads.get(dead_id, 0.0) or 1.0)
-        if self.backup:
-            # draft the backup whose speed best matches the dead node's role
-            sub_id = min(self.backup,
-                         key=lambda nid: abs(self.backup[nid].speed - dead_speed))
-            sub = self.backup.pop(sub_id)
-            self.active[sub.node_id] = sub
-            self.dht.join(sub.node_id)
-            self.events.append(Event(self._t, "replace", sub.node_id,
-                                     f"for {dead_id} tasks={pending}"))
+        sub = self.draft_backup(dead_id)
+        if sub is not None:
+            self.events[-1].detail += f" tasks={pending}"
             for tid in pending:
                 self.schedule.assignment[tid] = sub.node_id
-            self.schedule.loads[sub.node_id] = sum(
-                self.tasks[tid].flops / sub.speed for tid in pending)
-            self.dht.rebalance()
+            self.schedule.loads[sub.node_id] = (
+                self.schedule.loads.get(sub.node_id, 0.0)
+                + sum(self.tasks[tid].flops / sub.speed for tid in pending))
             return sub.node_id
-        # no backups left: reschedule pending tasks over surviving actives
+        # no backups left: reschedule pending tasks over surviving actives,
+        # seeded with their CURRENT loads and memory footprints so the
+        # rebalance sees real commitments (time and bytes), and merge the
+        # result back so makespan stays truthful
         self.events.append(Event(self._t, "reschedule", dead_id,
                                  f"tasks={pending} (backup pool empty)"))
         remaining = [self.tasks[tid] for tid in pending]
-        sched = schedule_loadbalance(remaining, list(self.active.values()))
+        survivors = list(self.active.values())
+        if not survivors:
+            return None
+        moving = set(pending)
+        init_used = {nid: [0.0, 0.0, 0.0] for nid in self.active}
+        for tid, nid in self.schedule.assignment.items():
+            if nid in init_used and tid not in moving:
+                t = self.tasks[tid]
+                init_used[nid][0] += t.gpu_bytes
+                init_used[nid][1] += t.cpu_bytes
+                init_used[nid][2] += t.disk_bytes
+        sched = schedule_loadbalance(remaining, survivors,
+                                     init_loads=self.schedule.loads,
+                                     init_used=init_used)
         for tid, nid in sched.assignment.items():
             self.schedule.assignment[tid] = nid
+        self.schedule.loads.update(sched.loads)
         return None
 
     def heartbeat_round(self) -> List[int]:

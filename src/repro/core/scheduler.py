@@ -70,11 +70,24 @@ def _fits(task: Task, node: CompNode, used: Dict[int, List[float]]) -> bool:
 
 
 def schedule_loadbalance(tasks: Sequence[Task], nodes: Sequence[CompNode],
-                         refine_iters: int = 200) -> Schedule:
-    """Eq. 2 solver: LPT greedy + move/swap local search."""
+                         refine_iters: int = 200,
+                         init_loads: Optional[Dict[int, float]] = None,
+                         init_used: Optional[Dict[int, Sequence[float]]] = None
+                         ) -> Schedule:
+    """Eq. 2 solver: LPT greedy + move/swap local search.
+
+    ``init_loads`` seeds each node's starting load (node_id -> seconds of
+    already-assigned work) and ``init_used`` its starting memory
+    footprint (node_id -> [gpu, cpu, disk] bytes), so a reschedule after
+    churn balances NEW tasks against survivors' existing commitments —
+    time AND memory — instead of pretending every peer is idle.  The
+    returned ``Schedule.loads`` includes the seed, so its makespan is the
+    true fleet makespan."""
     nodes = [n for n in nodes if n.online]
-    used = {n.node_id: [0.0, 0.0, 0.0] for n in nodes}
-    loads = {n.node_id: 0.0 for n in nodes}
+    used = {n.node_id: list((init_used or {}).get(n.node_id, (0.0, 0.0, 0.0)))
+            for n in nodes}
+    loads = {n.node_id: float((init_loads or {}).get(n.node_id, 0.0))
+             for n in nodes}
     byid = {n.node_id: n for n in nodes}
     assignment: Dict[int, int] = {}
     feasible = True
@@ -133,16 +146,30 @@ def schedule_loadbalance(tasks: Sequence[Task], nodes: Sequence[CompNode],
 
 def schedule_pipeline(tasks: Sequence[Task], nodes: Sequence[CompNode]
                       ) -> Schedule:
-    """Contiguous pipeline mapping: stage i -> i-th peer of a speed-sorted
-    feasible peer list (stages are already balanced by the decomposer
-    against these speeds)."""
+    """Contiguous pipeline mapping: stage i starts at the i-th peer of a
+    speed-sorted peer list (stages are already balanced by the decomposer
+    against these speeds) and skips forward, wrapping, to the next peer
+    with enough free memory — cumulative across the stages a peer already
+    holds.  Only when NO peer can fit a stage is it force-placed on its
+    preferred peer and the schedule marked infeasible."""
     nodes = sorted([n for n in nodes if n.online], key=lambda n: -n.speed)
+    used = {n.node_id: [0.0, 0.0, 0.0] for n in nodes}
     assignment, loads = {}, {n.node_id: 0.0 for n in nodes}
     feasible = len(nodes) >= len(tasks)
     for t in tasks:
-        n = nodes[t.task_id % len(nodes)]
-        if not n.memory_ok(t.gpu_bytes, t.cpu_bytes, t.disk_bytes):
+        start = t.task_id % len(nodes)
+        n = None
+        for j in range(len(nodes)):
+            cand = nodes[(start + j) % len(nodes)]
+            if _fits(t, cand, used):
+                n = cand
+                break
+        if n is None:
             feasible = False
+            n = nodes[start]
         assignment[t.task_id] = n.node_id
         loads[n.node_id] += t.flops / n.speed
+        used[n.node_id][0] += t.gpu_bytes
+        used[n.node_id][1] += t.cpu_bytes
+        used[n.node_id][2] += t.disk_bytes
     return Schedule(assignment, loads, feasible)

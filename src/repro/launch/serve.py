@@ -18,8 +18,19 @@ seen-token mask).  ``--kernel`` decodes through the fused Pallas
 paged-attention kernel (block-table-driven page DMA) instead of the
 chunked-gather scan path.
 
+``--replicas N`` serves the same workload through a **fleet**: N engine
+replicas on heterogeneous simulated devices (``--devices``, cycled from
+``perfmodel.DEVICE_CATALOG``) behind one FIFO queue, placed by Eq. 2
+estimated completion time (fast devices take proportionally more
+requests), with ``--standby`` spare replicas registered in the broker's
+backup pool and ``--heartbeat-every`` ticks between failure-detection
+rounds (``--reliability`` < 1 makes seeded mid-decode failures happen:
+in-flight requests re-prefill on the drafted replacement).
+
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b \
         --requests 8 --max-new 16 --slots 4 --chunk 16 --page-size 16
+    PYTHONPATH=src python -m repro.launch.serve --replicas 3 \
+        --devices rtx4090,rtx3080 --standby 1 --requests 12
 """
 from __future__ import annotations
 
@@ -29,8 +40,10 @@ import time
 import jax
 
 from repro.configs import ALL_ARCHS, get_smoke_config
+from repro.core.perfmodel import DEVICE_CATALOG
 from repro.models.transformer import init_params
 from repro.serve.engine import Request, ServingEngine
+from repro.serve.router import FleetRouter, sim_node
 
 
 def main():
@@ -68,6 +81,21 @@ def main():
     ap.add_argument("--rep-penalty", type=float, default=1.0,
                     help="CTRL-style repetition penalty on already-emitted "
                          "tokens (1.0 = off; applies to greedy slots too)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve through a FleetRouter with this many "
+                         "engine replicas (1 = single engine, no router)")
+    ap.add_argument("--devices", default="rtx4090,rtx3080",
+                    help="comma-separated DEVICE_CATALOG names cycled "
+                         "across replicas (fleet mode placement speeds)")
+    ap.add_argument("--standby", type=int, default=0,
+                    help="spare replicas registered in the broker backup "
+                         "pool, drafted by speed match on failure")
+    ap.add_argument("--heartbeat-every", type=int, default=0,
+                    help="fleet mode: broker heartbeat round every N "
+                         "engine ticks (0 = no failure detection)")
+    ap.add_argument("--reliability", type=float, default=1.0,
+                    help="per-heartbeat replica survival probability "
+                         "(< 1 exercises seeded mid-decode failover)")
     ap.add_argument("--no-warmup", action="store_true",
                     help="skip ahead-of-traffic compilation of the two "
                          "engine shapes")
@@ -76,11 +104,19 @@ def main():
 
     cfg = get_smoke_config(args.arch)
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
-    engine = ServingEngine(params, cfg, slots=args.slots,
-                           cache_len=args.cache_len, chunk=args.chunk,
-                           paged=args.paged, page_size=args.page_size,
-                           num_blocks=args.num_blocks or None,
-                           use_kernel=args.kernel, seed=args.seed)
+
+    def build_engine():
+        return ServingEngine(params, cfg, slots=args.slots,
+                             cache_len=args.cache_len, chunk=args.chunk,
+                             paged=args.paged, page_size=args.page_size,
+                             num_blocks=args.num_blocks or None,
+                             use_kernel=args.kernel, seed=args.seed)
+
+    if args.replicas > 1:
+        serve_fleet(args, cfg, build_engine)
+        return
+
+    engine = build_engine()
     if not args.no_warmup:
         t0 = time.time()
         engine.warmup()
@@ -110,6 +146,56 @@ def main():
           f"{st['admitted']} admissions, {st['backpressure']} backpressure")
     for r in sorted(done, key=lambda r: r.req_id)[:4]:
         print(f"  req{r.req_id}: prompt={r.prompt} -> {r.generated}")
+
+
+def serve_fleet(args, cfg, build_engine):
+    """--replicas > 1: broker-routed fleet over heterogeneous simulated
+    devices, one shared FIFO queue, ECT placement, seeded failover."""
+    devices = [d.strip() for d in args.devices.split(",") if d.strip()]
+    for d in devices:
+        if d not in DEVICE_CATALOG:
+            raise SystemExit(f"--devices: unknown device {d!r} "
+                             f"(catalog: {', '.join(DEVICE_CATALOG)})")
+    def node(i):
+        return sim_node(devices[i % len(devices)],
+                        reliability=args.reliability)
+    router = FleetRouter(
+        [(build_engine(), node(i)) for i in range(args.replicas)],
+        [(build_engine(), node(args.replicas + i))
+         for i in range(args.standby)],
+        seed=args.seed)
+    if not args.no_warmup:
+        t0 = time.time()
+        for rep in router.replicas:
+            rep.engine.warmup()
+        print(f"warmup: compiled {len(router.replicas)} replicas in "
+              f"{time.time() - t0:.2f}s (standby replicas compile when "
+              f"drafted)")
+    key = jax.random.PRNGKey(args.seed + 1)
+    for i in range(args.requests):
+        key, sub = jax.random.split(key)
+        prompt = jax.random.randint(sub, (4 + i % 4,), 0,
+                                    cfg.vocab_size).tolist()
+        router.submit(Request(i, prompt, max_new=args.max_new,
+                              temperature=args.temperature,
+                              top_p=args.top_p, top_k=args.top_k,
+                              rep_penalty=args.rep_penalty))
+    t0 = time.time()
+    done = router.run(heartbeat_every=args.heartbeat_every)
+    dt = time.time() - t0
+    toks = sum(len(r.generated) for r in done)
+    st = router.stats
+    print(f"{cfg.name} fleet: {len(router.live_replicas())} live replicas "
+          f"served {len(done)} requests, {toks} tokens in {dt:.2f}s "
+          f"({toks / dt:.1f} tok/s)")
+    print(f"  router: {st['placed']} placements, {st['held']} held ticks, "
+          f"{st['failures']} failures, {st['requeued']} requeued, "
+          f"{st['replacements']} drafted from backup")
+    for rep in sorted(router.replicas, key=lambda r: r.replica_id):
+        state = "live" if rep.alive else "DEAD"
+        print(f"  replica {rep.replica_id} [{rep.node.device.name}, "
+              f"{state}]: served {len(rep.served)} requests "
+              f"{sorted(rep.served)}")
 
 
 if __name__ == "__main__":

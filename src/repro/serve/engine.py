@@ -441,6 +441,8 @@ class ServingEngine:
                       "backpressure": 0}
         self._seed = seed
         self._step_seq = 0
+        self._admit_seq = 0
+        self._admitted_at = [0] * slots
         self._temp = np.zeros((slots,), np.float32)
         self._topp = np.ones((slots,), np.float32)
         self._topk = np.zeros((slots,), np.int32)
@@ -503,6 +505,98 @@ class ServingEngine:
             self.caches = self._clear_blocks_fn(self.caches,
                                                 jnp.asarray(pad))
         self._table[s] = -1
+
+    # -- occupancy / fleet hooks (read by serve.router.FleetRouter) ------
+
+    @property
+    def n_active(self) -> int:
+        return sum(1 for r in self.active if r is not None)
+
+    @property
+    def pending_tokens(self) -> int:
+        """Tokens this engine still has to process: queued requests cost
+        their full prompt + max_new (prefill AND decode are ahead of
+        them); admitted requests have paid prefill, so only their
+        remaining decode tokens count.  This is the engine's current load
+        term in the router's Eq. 2-style completion-time estimate."""
+        tok = sum(len(r.prompt) + r.max_new for r in self.queue)
+        tok += sum(r.max_new - len(r.generated)
+                   for r in self.active if r is not None)
+        return tok
+
+    @property
+    def free_pages(self) -> int:
+        """Pool pages not yet committed: free minus reservations minus
+        the worst-case demand of requests already sitting in this
+        engine's own queue (they WILL reserve at admission).  Dense
+        engines are page-unconstrained and report a sentinel large
+        enough that page checks never bind."""
+        if not self.paged:
+            return 1 << 30
+        queued = sum(self._blocks_for(len(r.prompt) + r.max_new)
+                     for r in self.queue)
+        return self._alloc.n_free - self._alloc.reserved - queued
+
+    @property
+    def occupancy(self) -> dict:
+        """One host-side snapshot of engine load for placement decisions
+        and monitoring — no device sync."""
+        return {
+            "active": self.n_active,
+            "queued": len(self.queue),
+            "free_slots": self.slots - self.n_active,
+            "pending_tokens": self.pending_tokens,
+            "free_pages": self.free_pages if self.paged else None,
+        }
+
+    def can_serve(self, prompt: List[int], max_new: int) -> bool:
+        """Could this engine EVER run such a request (regardless of its
+        current load)?  Mirrors ``submit``'s validation without raising,
+        plus a vocab bound so a heterogeneous fleet never routes token
+        ids a replica's model cannot embed."""
+        if not prompt or max(prompt) >= self.cfg.vocab_size:
+            return False
+        if self._bounded_ctx and len(prompt) + max_new > self.cache_len:
+            return False
+        if self.paged and self._blocks_for(len(prompt) + max_new) \
+                > self.num_blocks:
+            return False
+        return True
+
+    def blocks_needed(self, prompt_len: int, max_new: int) -> int:
+        """Worst-case pool pages a request would reserve at admission."""
+        return self._blocks_for(prompt_len + max_new)
+
+    def drain_requests(self) -> List[Request]:
+        """Harvest every live request in SUBMISSION order — admitted
+        slots by admission sequence (slot index lies once slots have
+        been recycled), then the engine queue, which is FIFO and
+        strictly younger than anything admitted — for re-queueing on
+        another replica.  Cache/pages are assumed lost with the replica,
+        so each request is reset to re-prefill from its prompt:
+        generated tokens are discarded, never silently kept or dropped.
+        The engine itself is left empty (slots idle, pages freed,
+        sampling params back to greedy defaults)."""
+        out: List[Request] = []
+        admitted = sorted((s for s in range(self.slots)
+                           if self.active[s] is not None),
+                          key=lambda s: self._admitted_at[s])
+        for s in admitted:
+            req = self.active[s]
+            self.active[s] = None
+            self._free_slot_blocks(s)
+            self._temp[s] = 0.0
+            self._topp[s] = 1.0
+            self._topk[s] = 0
+            self._reppen[s] = 1.0
+            out.append(req)
+        out.extend(self.queue)
+        self.queue = []
+        for req in out:
+            req.generated = []
+            req.pending = -1
+            req.done = False
+        return out
 
     # -- request intake --------------------------------------------------
 
@@ -586,6 +680,8 @@ class ServingEngine:
                     self._slot_reserved[s] = need
                 self.queue.pop(0)
                 self.active[s] = req
+                self._admit_seq += 1
+                self._admitted_at[s] = self._admit_seq
                 self.caches = self._reset_fn(self.caches, s)
                 self._seen = self._clear_seen_fn(self._seen, s)
                 self._temp[s] = req.temperature

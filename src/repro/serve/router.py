@@ -1,0 +1,305 @@
+"""Fleet router: broker-routed multi-engine serving (paper §3.2 + §3.8).
+
+``FleetRouter`` is the bridge between the repo's two halves: the
+decentralized control plane (``core.broker.Broker`` — membership,
+heartbeats, a backup pool, speed-matched replacement drafting) and the
+serving data plane (``serve.engine.ServingEngine`` — chunked prefill,
+paged slot cache, fused decode kernel).  It owns N engine replicas, each
+bound to a simulated ``CompNode`` device (``perfmodel.DEVICE_CATALOG``),
+pulls from ONE shared FIFO request queue, and places each request on the
+replica minimizing the Eq. 2-style estimated completion time
+
+    ECT(r, p) = (pending_tokens(p) + prompt + max_new) * flops_per_token(p)
+                / CompNode.speed(p)
+
+subject to the replica's free paged blocks (a request is only dispatched
+to a replica whose pool can cover its worst-case reservation on top of
+everything already queued there; otherwise it waits at the head of the
+shared queue — FIFO is never reordered).  A head request that no LIVE
+replica could ever run (heterogeneous fleets: vocab/context/pool gating)
+drafts the fastest capable standby from the backup pool immediately
+instead of waiting for a failure that may never come.
+
+Fault tolerance reuses the broker verbatim: every replica's node is
+registered ``active``, every standby replica's node ``backup``.  A
+heartbeat round can kill a replica mid-decode; the broker then drafts
+the backup whose device speed best matches the dead one, the router
+activates the corresponding standby engine, and the dead replica's
+in-flight requests (admitted slots AND its internal queue) are re-queued
+at the FRONT of the shared queue from their prompts — the KV/pages died
+with the replica, so they re-prefill from scratch; nothing is ever
+silently dropped.  Requests on unaffected replicas are untouched (slot
+isolation keeps their greedy decode bitwise-identical to a no-failure
+run).
+
+Replicas may be heterogeneous in BOTH dimensions: different simulated
+devices (speed skews placement toward fast peers) and different
+(params, cfg) models (``can_serve`` gates by vocab bound, context
+length, and pool size, so a request only routes to replicas whose model
+can actually run it).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+
+from repro.core.broker import Broker
+from repro.core.perfmodel import (DEVICE_CATALOG, LINK_REGIMES, CompNode,
+                                  DeviceSpec, LinkSpec)
+from repro.serve.engine import Request, ServingEngine
+
+DeviceLike = Union[str, DeviceSpec, CompNode]
+
+
+def sim_node(device: DeviceLike, *,
+             link: Optional[LinkSpec] = None, lam: float = 0.75,
+             reliability: float = 0.999) -> CompNode:
+    """A simulated provider for a replica: catalog name / spec -> CompNode
+    (node_id is assigned by the broker at registration)."""
+    if isinstance(device, CompNode):
+        return device
+    spec = DEVICE_CATALOG[device] if isinstance(device, str) else device
+    return CompNode(-1, spec, link or LINK_REGIMES["lan_10gbps"], lam=lam,
+                    reliability=reliability)
+
+
+def _flops_per_token(engine: ServingEngine) -> float:
+    """Analytic per-token cost of a replica's model: the standard
+    2 * params FLOPs/token estimate, read off the replica's own param
+    pytree so heterogeneous-model fleets cost each replica correctly."""
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(engine.params))
+    return 2.0 * float(n_params)
+
+
+@dataclass
+class Replica:
+    """One engine bound to one simulated device."""
+    replica_id: int
+    engine: ServingEngine
+    node: CompNode
+    flops_per_token: float
+    alive: bool = True
+    served: List[int] = field(default_factory=list)   # completed req_ids
+    _harvested: int = 0        # prefix of engine.finished already collected
+
+
+class FleetRouter:
+    """N serving replicas + standby spares behind one FIFO queue, with
+    broker membership/failover.  See the module docstring for semantics.
+
+    ``replicas`` / ``standby``: sequences of ``(engine, device)`` pairs,
+    ``device`` a ``DEVICE_CATALOG`` name, a ``DeviceSpec``, or a
+    pre-built ``CompNode`` (whose ``reliability`` drives the seeded
+    heartbeat failure process).
+
+    ``stats`` counts ``placed`` dispatches, ``completed`` requests,
+    replica ``failures``, ``requeued`` in-flight requests, backup-pool
+    ``replacements``, and head-of-line ``held`` ticks (no replica had
+    pool room for the queue head).  ``placements`` records every
+    req_id -> [replica_id, ...] dispatch history (len > 1 = re-queued
+    after a failure).
+    """
+
+    def __init__(self, replicas: Sequence[Tuple[ServingEngine, DeviceLike]],
+                 standby: Sequence[Tuple[ServingEngine, DeviceLike]] = (),
+                 *, seed: int = 0, heartbeat_s: float = 10.0):
+        if not replicas:
+            raise ValueError("FleetRouter: at least one replica required")
+        self.broker = Broker(seed=seed, heartbeat_s=heartbeat_s)
+        self.replicas: List[Replica] = []
+        self._standby: Dict[int, Replica] = {}      # node_id -> Replica
+        self._by_node: Dict[int, Replica] = {}
+        rid = 0
+        seen_engines: set = set()
+        for pool, pairs in (("active", replicas), ("backup", standby)):
+            for engine, device in pairs:
+                if id(engine) in seen_engines:
+                    raise ValueError(
+                        "FleetRouter: the same ServingEngine object was "
+                        "passed for two replicas — each replica needs its "
+                        "own engine (they hold independent slot caches)")
+                seen_engines.add(id(engine))
+                node = sim_node(device)
+                self.broker.register(node, pool=pool)
+                rep = Replica(rid, engine, node, _flops_per_token(engine),
+                              alive=(pool == "active"))
+                self._by_node[node.node_id] = rep
+                if pool == "active":
+                    self.replicas.append(rep)
+                else:
+                    self._standby[node.node_id] = rep
+                rid += 1
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+        self.placements: Dict[int, List[int]] = {}
+        self._submit_order: Dict[int, int] = {}     # req_id -> arrival seq
+        self.stats = {"placed": 0, "completed": 0, "failures": 0,
+                      "requeued": 0, "replacements": 0, "held": 0}
+
+    # -- membership ------------------------------------------------------
+
+    def live_replicas(self) -> List[Replica]:
+        return [r for r in self.replicas if r.alive]
+
+    def _servable_somewhere(self, req: Request) -> bool:
+        pool = self.live_replicas() + list(self._standby.values())
+        return any(r.engine.can_serve(req.prompt, req.max_new) for r in pool)
+
+    # -- intake + placement ----------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        if not self._servable_somewhere(req):
+            raise ValueError(
+                f"FleetRouter: no replica (live or standby) can ever serve "
+                f"request {req.req_id} (prompt={len(req.prompt)} tokens, "
+                f"max_new={req.max_new}) — check vocab/cache_len/pool sizes")
+        self._submit_order.setdefault(req.req_id, len(self._submit_order))
+        self.queue.append(req)
+
+    def _ect(self, rep: Replica, req: Request) -> float:
+        """Eq. 2-style estimated completion time of ``req`` on ``rep``:
+        the replica's outstanding work plus this request, costed at the
+        replica's model size, over the simulated device speed."""
+        tokens = rep.engine.pending_tokens + len(req.prompt) + req.max_new
+        return tokens * rep.flops_per_token / rep.node.speed
+
+    def _draft_capable_standby(self, req: Request) -> Optional[Replica]:
+        """No LIVE replica can ever serve ``req``: activate the fastest
+        standby whose model can (waiting for a failure to draft it would
+        hold the queue head forever)."""
+        cands = [r for r in self._standby.values()
+                 if r.engine.can_serve(req.prompt, req.max_new)]
+        if not cands:
+            return None
+        rep = max(cands, key=lambda r: r.node.speed)
+        self.broker.activate_backup(
+            rep.node.node_id, f"req {req.req_id} unservable on live fleet")
+        self._standby.pop(rep.node.node_id)
+        rep.alive = True
+        self.replicas.append(rep)
+        self.stats["replacements"] += 1
+        return rep
+
+    def _dispatch(self) -> None:
+        """Place queued requests, FIFO: the head request goes to the
+        min-ECT live replica whose paged pool can still cover its
+        worst-case reservation; if none currently can (but one could
+        later), the head WAITS — later requests are not reordered past
+        it.  A head that no live replica could EVER run drafts a capable
+        standby from the backup pool, or raises (never a silent drop)."""
+        while self.queue:
+            req = self.queue[0]
+            able = [r for r in self.live_replicas()
+                    if r.engine.can_serve(req.prompt, req.max_new)]
+            if not able:
+                drafted = self._draft_capable_standby(req)
+                if drafted is None:
+                    raise RuntimeError(
+                        f"FleetRouter: request {req.req_id} became "
+                        f"unservable after fleet churn (no live or standby "
+                        f"replica can run it)")
+                able = [drafted]
+            ready = [r for r in able
+                     if r.engine.free_pages
+                     >= r.engine.blocks_needed(len(req.prompt), req.max_new)]
+            if not ready:
+                self.stats["held"] += 1
+                return
+            best = min(ready, key=lambda r: (self._ect(r, req), r.replica_id))
+            self.queue.pop(0)
+            best.engine.submit(req)
+            self.placements.setdefault(req.req_id, []).append(best.replica_id)
+            self.stats["placed"] += 1
+
+    # -- failure handling -------------------------------------------------
+
+    def _harvest(self, rep: Replica) -> None:
+        for req in rep.engine.finished[rep._harvested:]:
+            self.finished.append(req)
+            rep.served.append(req.req_id)
+            self.stats["completed"] += 1
+        rep._harvested = len(rep.engine.finished)
+
+    def _on_death(self, node_id: int) -> None:
+        rep = self._by_node.get(node_id)
+        if rep is None or not rep.alive:
+            return
+        self._harvest(rep)                 # finished outputs survive
+        rep.alive = False
+        requeue = rep.engine.drain_requests()
+        self.queue[:0] = requeue
+        # restore GLOBAL submission order: with several replicas dying in
+        # one heartbeat round (or across rounds before redispatch), the
+        # per-replica prepends alone would interleave newer requests
+        # ahead of older ones
+        self.queue.sort(key=lambda r: self._submit_order[r.req_id])
+        self.stats["failures"] += 1
+        self.stats["requeued"] += len(requeue)
+        sub = self.broker.draft_backup(node_id)
+        if sub is not None:
+            drafted = self._standby.pop(sub.node_id)
+            drafted.alive = True
+            self.replicas.append(drafted)
+            self.stats["replacements"] += 1
+
+    def heartbeat_round(self) -> List[int]:
+        """One broker ping-pong round over the replica nodes: each node
+        fails with (1 - reliability), seeded — a failure mid-decode kills
+        the replica, requeues its in-flight requests from their prompts,
+        and drafts a speed-matched standby.  Returns dead node ids."""
+        dead = self.broker.heartbeat_round()
+        for nid in dead:
+            self._on_death(nid)
+        return dead
+
+    def fail_replica(self, replica_id: int) -> None:
+        """Deterministic failure injection (tests/examples): kill one
+        replica through the same broker quit -> drain -> requeue ->
+        draft path the heartbeat uses."""
+        rep = next(r for r in self.replicas if r.replica_id == replica_id)
+        self.broker.quit(rep.node.node_id, graceful=False)
+        self._on_death(rep.node.node_id)
+
+    # -- the serving loop -------------------------------------------------
+
+    def tick(self) -> int:
+        """One fleet iteration: dispatch the shared queue, tick every
+        live replica, harvest finished requests.  Returns the number of
+        active slots across the fleet."""
+        self._dispatch()
+        n = 0
+        for rep in self.live_replicas():
+            n += rep.engine.tick()
+            self._harvest(rep)
+        return n
+
+    def outstanding(self) -> int:
+        """Requests submitted but not yet completed (shared queue +
+        every live replica's queue and slots)."""
+        n = len(self.queue)
+        for rep in self.live_replicas():
+            n += len(rep.engine.queue) + rep.engine.n_active
+        return n
+
+    def run(self, max_ticks: int = 10_000,
+            heartbeat_every: int = 0) -> List[Request]:
+        """Serve until every submitted request completed (or
+        ``max_ticks``).  ``heartbeat_every`` > 0 runs a broker heartbeat
+        round every that-many ticks, so seeded failures strike
+        mid-decode."""
+        for t in range(max_ticks):
+            if heartbeat_every and t > 0 and t % heartbeat_every == 0:
+                self.heartbeat_round()
+            n = self.tick()
+            if n == 0 and not self.queue:
+                break
+        if self.outstanding():
+            # never return partial results as success
+            why = ("fleet died (backup pool exhausted)"
+                   if not self.live_replicas() else f"max_ticks={max_ticks}")
+            raise RuntimeError(
+                f"FleetRouter: {self.outstanding()} requests outstanding "
+                f"after {why}")
+        return self.finished

@@ -1,0 +1,231 @@
+"""Broker failover accounting regressions (paper §3.2/§3.8).
+
+The seed broker drafted backups by comparing a backup's SPEED (FLOP/s)
+against the dead node's LOAD (seconds) — dimensionally nonsense that
+always picked the slowest backup — left dead nodes' entries in
+``Schedule.loads`` (so makespan counted corpses), and threw away the
+survivors' existing loads when rescheduling with an empty backup pool.
+``schedule_pipeline`` additionally mapped stage i to ``nodes[i % n]``
+blind to memory.  These tests pin the fixed semantics: speed-matched
+drafting, truthful post-churn loads/makespan, load-seeded rebalance,
+feasibility-aware pipeline mapping, and deterministic seeded churn sims.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.broker import Broker
+from repro.core.dag import build_model_dag
+from repro.core.perfmodel import (DEVICE_CATALOG, GB, LINK_REGIMES, CompNode,
+                                  DeviceSpec, make_fleet)
+from repro.core.scheduler import (Task, schedule_loadbalance,
+                                  schedule_pipeline)
+
+LINK = LINK_REGIMES["wan_1gbps"]
+
+
+def _node(dev: str, reliability: float = 1.0) -> CompNode:
+    return CompNode(-1, DEVICE_CATALOG[dev], LINK, reliability=reliability)
+
+
+def _bert_dag():
+    return build_model_dag(get_config("bert-large"), batch=8, seq=128)
+
+
+def _mixed_broker():
+    """2 actives (one slow rtx3080, one fast a100) + one backup of each
+    speed class, explicitly pooled."""
+    broker = Broker(seed=0)
+    ids = {}
+    ids["slow"] = broker.register(_node("rtx3080"), pool="active")
+    ids["fast"] = broker.register(_node("a100"), pool="active")
+    ids["slow_backup"] = broker.register(_node("rtx3080"), pool="backup")
+    ids["fast_backup"] = broker.register(_node("a100"), pool="backup")
+    broker.submit_job(_bert_dag(), n_parts=2)
+    return broker, ids
+
+
+# ---------------------------------------------------------------------------
+# Satellite 1: replacement drafting matches SPEED, not load-seconds
+# ---------------------------------------------------------------------------
+
+def test_slow_dead_node_drafts_slow_backup():
+    broker, ids = _mixed_broker()
+    broker.quit(ids["slow"], graceful=False)
+    assert ids["slow_backup"] in broker.active
+    assert ids["fast_backup"] in broker.backup
+    # the dead node's tasks all moved to the drafted peer
+    assert ids["slow"] not in set(broker.schedule.assignment.values())
+
+
+def test_fast_dead_node_drafts_fast_backup():
+    """The regression case: loads are O(seconds), so the seed's
+    |speed - load| metric always drafted the SLOWEST backup — killing
+    the fast node must draft the fast backup, not an arbitrary one."""
+    broker, ids = _mixed_broker()
+    broker.quit(ids["fast"], graceful=False)
+    assert ids["fast_backup"] in broker.active
+    assert ids["slow_backup"] in broker.backup
+
+
+def test_speed_record_survives_node_death():
+    broker, ids = _mixed_broker()
+    dead_speed = broker.active[ids["fast"]].speed
+    broker.quit(ids["fast"], graceful=False)
+    # the node object is popped, but its speed record remains for drafting
+    assert broker.speeds[ids["fast"]] == dead_speed
+
+
+# ---------------------------------------------------------------------------
+# Satellite 2: loads stay truthful after churn
+# ---------------------------------------------------------------------------
+
+def test_dead_node_load_entry_removed():
+    broker, ids = _mixed_broker()
+    assert ids["slow"] in broker.schedule.loads
+    broker.quit(ids["slow"], graceful=False)
+    assert ids["slow"] not in broker.schedule.loads
+    # makespan is now the max over LIVE nodes only
+    assert set(broker.schedule.loads) <= set(broker.active)
+    assert broker.schedule.makespan == max(broker.schedule.loads.values())
+
+
+def test_loads_match_assignment_after_replacement():
+    """After draft-and-remap, every node's load equals the recomputed
+    sum of its assigned tasks' times (no stale or double-counted
+    entries)."""
+    broker, ids = _mixed_broker()
+    broker.quit(ids["fast"], graceful=False)
+    for nid, node in broker.active.items():
+        expect = sum(broker.tasks[tid].flops / node.speed
+                     for tid, anid in broker.schedule.assignment.items()
+                     if anid == nid)
+        assert broker.schedule.loads.get(nid, 0.0) == pytest.approx(expect)
+
+
+def test_empty_backup_reschedule_seeds_and_merges_loads():
+    """Backup pool empty: the rebalance must see survivors' EXISTING
+    loads (not pretend they are idle) and merge its result back so
+    makespan stays truthful."""
+    broker = Broker(backup_fraction=0.0, seed=3)
+    for _ in range(4):
+        broker.register(_node("rtx3080"), pool="active")
+    broker.submit_job(_bert_dag(), n_parts=4)
+    victims = [nid for nid in broker.schedule.assignment.values()][:1]
+    broker.quit(victims[0], graceful=False)
+    assert victims[0] not in broker.schedule.loads
+    assert set(broker.schedule.assignment.values()) <= set(broker.active)
+    for nid, node in broker.active.items():
+        expect = sum(broker.tasks[tid].flops / node.speed
+                     for tid, anid in broker.schedule.assignment.items()
+                     if anid == nid)
+        assert broker.schedule.loads.get(nid, 0.0) == pytest.approx(expect)
+
+
+def test_init_used_blocks_overcommitted_peer():
+    """Memory commitments survive a reschedule too: a survivor whose GPU
+    is nearly full from tasks it already holds must not be handed more
+    than it can fit, even if it is the less-loaded peer."""
+    a = CompNode(0, DeviceSpec("a", 100.0, gpu_mem=10 * GB), LINK)
+    b = CompNode(1, DeviceSpec("b", 100.0, gpu_mem=10 * GB), LINK)
+    task = Task(0, ("op",), flops=1e12, gpu_bytes=4 * GB)
+    sched = schedule_loadbalance(
+        [task], [a, b],
+        init_loads={0: 0.0, 1: 50.0},          # a looks idle...
+        init_used={0: [8 * GB, 0.0, 0.0]})     # ...but its memory is full
+    assert sched.feasible
+    assert sched.assignment[0] == 1            # only b can actually fit it
+
+
+def test_init_loads_steers_rebalance_to_less_loaded_peer():
+    a = CompNode(0, DEVICE_CATALOG["rtx3080"], LINK)
+    b = CompNode(1, DEVICE_CATALOG["rtx3080"], LINK)
+    task = Task(0, ("op",), flops=1e12, gpu_bytes=GB)
+    sched = schedule_loadbalance([task], [a, b],
+                                 init_loads={0: 100.0, 1: 0.0})
+    assert sched.assignment[0] == 1            # idle peer wins
+    assert sched.loads[0] == pytest.approx(100.0)   # seed merged through
+    assert sched.makespan == pytest.approx(100.0)
+
+
+# ---------------------------------------------------------------------------
+# Satellite 3: schedule_pipeline memory feasibility
+# ---------------------------------------------------------------------------
+
+def test_pipeline_skips_memory_infeasible_peer():
+    """Stage 0 prefers the fastest peer but does not fit its memory: it
+    must SKIP to the next feasible peer (and the schedule stays
+    feasible), not blindly map and flip the flag."""
+    thin = CompNode(0, DeviceSpec("thin", 100.0, gpu_mem=1 * GB), LINK)
+    fat = CompNode(1, DeviceSpec("fat", 10.0, gpu_mem=64 * GB), LINK)
+    big = Task(0, ("s0",), flops=1e12, gpu_bytes=8 * GB)
+    small = Task(1, ("s1",), flops=1e12, gpu_bytes=0.5 * GB)
+    sched = schedule_pipeline([big, small], [thin, fat])
+    assert sched.feasible
+    assert sched.assignment[0] == fat.node_id      # skipped past thin
+    assert sched.assignment[1] == fat.node_id      # start index 1 = fat
+
+
+def test_pipeline_memory_use_is_cumulative():
+    """Two stages that each fit a peer alone but not together: the
+    second must move on instead of overcommitting the peer."""
+    n0 = CompNode(0, DeviceSpec("a", 100.0, gpu_mem=1 * GB), LINK)
+    n1 = CompNode(1, DeviceSpec("b", 100.0, gpu_mem=1 * GB), LINK)
+    s0 = Task(0, ("s0",), flops=1e12, gpu_bytes=0.7 * GB)
+    s1 = Task(1, ("s1",), flops=1e12, gpu_bytes=0.7 * GB)
+    s2 = Task(2, ("s2",), flops=1e12, gpu_bytes=0.7 * GB)
+    sched = schedule_pipeline([s0, s1, s2], [n0, n1])
+    # s0 -> n0, s1 -> n1; s2 wraps to n0 but 1.4GB > 1GB on BOTH peers
+    assert not sched.feasible
+    assert sched.assignment[0] != sched.assignment[1]
+
+
+def test_pipeline_infeasible_only_when_no_peer_fits():
+    n0 = CompNode(0, DeviceSpec("a", 100.0, gpu_mem=1 * GB), LINK)
+    huge = Task(0, ("s0",), flops=1e12, gpu_bytes=100 * GB)
+    sched = schedule_pipeline([huge], [n0])
+    assert not sched.feasible
+    assert sched.assignment[0] == 0                # still force-placed
+
+
+# ---------------------------------------------------------------------------
+# Seeded churn sims: invariants hold through quit/replace/reschedule
+# ---------------------------------------------------------------------------
+
+def _churn_broker(seed, n=24, reliability=0.9):
+    broker = Broker(backup_fraction=0.25, seed=seed)
+    for node in make_fleet([("rtx3080", n // 2), ("rtx4090", n // 2)], LINK):
+        node.reliability = reliability
+        broker.register(node)
+    broker.submit_job(_bert_dag(), n_parts=8)
+    return broker
+
+
+@pytest.mark.parametrize("seed", [11, 42])
+def test_churn_loads_and_assignment_invariants(seed):
+    broker = _churn_broker(seed)
+    for _ in range(15):
+        broker.heartbeat_round()
+        if not broker.active:
+            break
+        # loads never reference a dead node, makespan stays finite + true
+        assert set(broker.schedule.loads) <= set(broker.active)
+        assert broker.schedule.makespan >= 0.0
+        # every unfinished task sits on a live node
+        assert all(nid in broker.active
+                   for tid, nid in broker.schedule.assignment.items())
+    replaced = sum(1 for e in broker.events if e.kind == "replace")
+    failures = sum(1 for e in broker.events
+                   if e.kind == "quit" and e.detail == "failure")
+    assert failures > 0                         # the sim actually churns
+    assert replaced > 0                         # and the backup pool works
+
+
+def test_churn_sim_deterministic_and_all_assigned():
+    results = []
+    for _ in range(2):
+        broker = _churn_broker(7)
+        results.append(broker.run_sim(rounds=15))
+    assert results[0] == results[1]
+    assert results[0]["all_tasks_assigned"]
+    assert results[0]["failures"] > 0

@@ -1,0 +1,332 @@
+"""FleetRouter tests: broker-routed multi-engine serving.
+
+End-to-end failover (the acceptance criterion): with >= 3 replicas and a
+seeded heartbeat failure mid-decode, every submitted request completes,
+the replacement is drafted from the backup pool by speed match, and
+unaffected replicas' outputs are bitwise-identical to a no-failure run.
+Plus: Eq. 2 placement skew toward fast simulated devices,
+heterogeneous-config routing (vocab / context / pool gating), the engine
+occupancy/drain hooks the router runs on, and fleet-death reporting.
+"""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.transformer import init_params
+from repro.serve.engine import Request, ServingEngine
+from repro.serve.router import FleetRouter, sim_node
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = dataclasses.replace(get_smoke_config("gpt3-24l"), vocab_size=128,
+                              d_model=128, d_ff=256, n_heads=4, n_kv_heads=4,
+                              head_dim=32)
+    return init_params(jax.random.PRNGKey(0), cfg), cfg
+
+
+def _engine(params, cfg, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("cache_len", 64)
+    kw.setdefault("chunk", 8)
+    kw.setdefault("paged", True)
+    kw.setdefault("page_size", 16)
+    return ServingEngine(params, cfg, **kw)
+
+
+def _uniform_requests(n, cfg, max_new=6):
+    return [Request(i, [(3 + 5 * i + j) % cfg.vocab_size
+                        for j in range(4 + i % 3)], max_new=max_new)
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Engine hooks the router is built on
+# ---------------------------------------------------------------------------
+
+def test_engine_occupancy_and_pending_tokens(tiny):
+    params, cfg = tiny
+    eng = _engine(params, cfg)
+    assert eng.pending_tokens == 0
+    assert eng.occupancy["free_slots"] == 2
+    eng.submit(Request(0, [1, 2, 3], max_new=5))
+    assert eng.pending_tokens == 8              # queued: prompt + max_new
+    eng.tick()                                  # admit + first decode
+    # admitted: prefill paid, one token generated -> 4 decode tokens left
+    assert eng.pending_tokens == 4
+    occ = eng.occupancy
+    assert occ["active"] == 1 and occ["queued"] == 0
+    assert occ["free_pages"] == eng.num_blocks - 1   # 8-token request
+
+
+def test_engine_free_pages_counts_queued_demand(tiny):
+    params, cfg = tiny
+    eng = _engine(params, cfg)                   # pool = 8 pages of 16
+    eng.submit(Request(0, list(range(1, 9)), max_new=40))   # 3 pages
+    assert eng.free_pages == eng.num_blocks - 3  # queued demand counted
+    eng.submit(Request(1, list(range(1, 9)), max_new=40))
+    assert eng.free_pages == eng.num_blocks - 6
+
+
+def test_engine_can_serve_bounds(tiny):
+    params, cfg = tiny
+    eng = _engine(params, cfg)
+    assert eng.can_serve([1, 2, 3], 4)
+    assert not eng.can_serve([], 4)                        # empty prompt
+    assert not eng.can_serve([cfg.vocab_size], 4)          # vocab bound
+    assert not eng.can_serve([1] * 60, 10)                 # wraps cache_len
+    small = _engine(params, cfg, num_blocks=2)
+    assert not small.can_serve([1] * 30, 30)               # > pool size
+
+
+def test_engine_drain_order_is_admission_order_after_slot_recycle(tiny):
+    """Slot index lies about age once slots recycle: A (slot 0) finishes,
+    younger C lands in slot 0 while B (slot 1) still runs — drain must
+    return [B, C], not [C, B]."""
+    params, cfg = tiny
+    eng = _engine(params, cfg)
+    eng.submit(Request(0, [1, 2], max_new=1))      # A: finishes first
+    eng.submit(Request(1, [3, 4], max_new=8))      # B: slot 1, long
+    eng.tick()                                     # A done, slot 0 free
+    assert eng.finished and eng.finished[0].req_id == 0
+    eng.submit(Request(2, [5, 6], max_new=8))      # C: recycles slot 0
+    eng.tick()
+    assert [r.req_id for r in eng.drain_requests()] == [1, 2]
+
+
+def test_engine_drain_resets_requests_and_empties_engine(tiny):
+    params, cfg = tiny
+    eng = _engine(params, cfg)
+    for r in _uniform_requests(3, cfg):
+        eng.submit(r)
+    for _ in range(2):
+        eng.tick()                 # 2 admitted + decoding, 1 still queued
+    assert eng.n_active == 2 and len(eng.queue) == 1
+    drained = eng.drain_requests()
+    assert [r.req_id for r in drained] == [0, 1, 2]   # slots first, FIFO
+    assert all(r.generated == [] and r.pending == -1 and not r.done
+               for r in drained)
+    assert eng.n_active == 0 and not eng.queue
+    assert eng.free_pages == eng.num_blocks           # every page back
+    # the engine still serves correctly after a drain (fresh admission)
+    eng.submit(drained[0])
+    eng.run()
+    assert len(eng.finished[-1].generated) == drained[0].max_new
+
+
+# ---------------------------------------------------------------------------
+# Routing
+# ---------------------------------------------------------------------------
+
+def test_single_replica_matches_plain_engine(tiny):
+    params, cfg = tiny
+    reqs = _uniform_requests(3, cfg)
+    plain = _engine(params, cfg)
+    for r in reqs:
+        plain.submit(Request(r.req_id, list(r.prompt), max_new=r.max_new))
+    ref = {r.req_id: r.generated for r in plain.run()}
+    router = FleetRouter([(_engine(params, cfg), "rtx4090")])
+    for r in reqs:
+        router.submit(r)
+    out = {r.req_id: r.generated for r in router.run()}
+    assert out == ref
+
+
+def test_placement_skews_toward_faster_device(tiny):
+    params, cfg = tiny
+    router = FleetRouter([(_engine(params, cfg), "rtx4090"),
+                          (_engine(params, cfg), "rtx3080")])
+    for i in range(8):
+        router.submit(Request(i, [1, 2, 3, 4], max_new=4))   # uniform
+    done = router.run()
+    assert len(done) == 8
+    fast, slow = router.replicas
+    assert len(fast.served) > len(slow.served), (fast.served, slow.served)
+    # proportional-to-speed split: 8 * 82.58/(82.58+59.5) ~ 4.65 -> 5 v 3
+    assert len(fast.served) == 5 and len(slow.served) == 3
+
+
+def test_heterogeneous_config_routing(tiny):
+    """Replicas with DIFFERENT models: requests route only to replicas
+    whose vocab / context length / pool can actually run them."""
+    params, cfg = tiny
+    small_cfg = dataclasses.replace(cfg, vocab_size=64)
+    small_params = init_params(jax.random.PRNGKey(1), small_cfg)
+    router = FleetRouter(
+        [(_engine(params, cfg), "rtx3080"),                  # vocab 128
+         (_engine(small_params, small_cfg, cache_len=32), "a100")])
+    big_vocab = Request(0, [100, 101], max_new=3)       # only replica 0
+    long_ctx = Request(1, [2] * 30, max_new=10)         # 40 > 32: only 0
+    anywhere = Request(2, [1, 2, 3], max_new=3)
+    for r in (big_vocab, long_ctx, anywhere):
+        router.submit(r)
+    done = router.run()
+    assert sorted(r.req_id for r in done) == [0, 1, 2]
+    assert router.placements[0] == [0]
+    assert router.placements[1] == [0]
+    # the third is legal on both; the a100 replica is idle AND faster
+    assert router.placements[2] == [1]
+    with pytest.raises(ValueError):
+        router.submit(Request(9, [500], max_new=2))     # nobody's vocab
+
+
+def test_head_unservable_on_live_fleet_drafts_capable_standby(tiny):
+    """A request only a STANDBY's model can run must not hold the queue
+    forever waiting for a failure: the router drafts the capable standby
+    at dispatch time and every request (including those queued behind
+    the head) completes."""
+    params, cfg = tiny
+    small_cfg = dataclasses.replace(cfg, vocab_size=64)
+    small_params = init_params(jax.random.PRNGKey(1), small_cfg)
+    router = FleetRouter(
+        [(_engine(small_params, small_cfg), "rtx3080")],     # vocab 64
+        [(_engine(params, cfg), "rtx4090")])                 # vocab 128
+    router.submit(Request(0, [100, 101], max_new=3))   # needs the standby
+    router.submit(Request(1, [1, 2, 3], max_new=3))    # behind the head
+    done = router.run()
+    assert sorted(r.req_id for r in done) == [0, 1]
+    assert router.stats["replacements"] == 1
+    assert router.placements[0] == [router.replicas[-1].replica_id]
+    assert not router._standby
+
+
+def test_router_rejects_unservable_request(tiny):
+    params, cfg = tiny
+    router = FleetRouter([(_engine(params, cfg), "rtx4090")])
+    with pytest.raises(ValueError):
+        router.submit(Request(0, [1] * 60, max_new=30))   # wraps cache
+
+
+# ---------------------------------------------------------------------------
+# Failover (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def _fleet(params, cfg, *, kill_replica_1: bool):
+    """3 actives (rtx4090 + 2x rtx3080) + 1 rtx3080 standby; replica 1
+    carries reliability 0 in the failure run, so the FIRST heartbeat
+    round (tick 2, mid-decode) kills exactly it, deterministically."""
+    nodes = [sim_node("rtx4090", reliability=1.0),
+             sim_node("rtx3080",
+                      reliability=0.0 if kill_replica_1 else 1.0),
+             sim_node("rtx3080", reliability=1.0)]
+    return FleetRouter([(_engine(params, cfg), n) for n in nodes],
+                       [(_engine(params, cfg),
+                         sim_node("rtx3080", reliability=1.0))], seed=0)
+
+
+def test_fleet_failover_end_to_end(tiny):
+    params, cfg = tiny
+    reqs = _uniform_requests(8, cfg)
+
+    calm = _fleet(params, cfg, kill_replica_1=False)
+    for r in reqs:
+        calm.submit(Request(r.req_id, list(r.prompt), max_new=r.max_new))
+    ref = {r.req_id: r.generated for r in calm.run(heartbeat_every=2)}
+    assert calm.stats["failures"] == 0
+
+    stormy = _fleet(params, cfg, kill_replica_1=True)
+    for r in reqs:
+        stormy.submit(r)
+    out = {r.req_id: r.generated for r in stormy.run(heartbeat_every=2)}
+
+    # the failure really struck mid-decode: replica 1 had live requests
+    assert stormy.stats["failures"] == 1
+    assert stormy.stats["requeued"] >= 1
+    # every submitted request still completes, with its full max_new
+    assert sorted(out) == [r.req_id for r in reqs]
+    assert all(len(out[r.req_id]) == r.max_new for r in reqs)
+    # the replacement was drafted from the backup pool by speed match:
+    # an rtx3080 died, the rtx3080 standby (not nothing, and it would
+    # beat any faster standby) came in
+    assert stormy.stats["replacements"] == 1
+    drafted = stormy.replicas[-1]
+    assert drafted.alive and drafted.node.device.name == "rtx3080"
+    dead = next(r for r in stormy.replicas if not r.alive)
+    assert dead.replica_id == 1
+    # unaffected replicas' outputs are bitwise-identical to the
+    # no-failure run (slot isolation: extra/requeued traffic cannot
+    # perturb co-resident greedy decode)
+    unaffected = [rid for rid, reps in stormy.placements.items()
+                  if 1 not in reps]
+    assert unaffected, "some requests must have avoided the dead replica"
+    for rid in unaffected:
+        assert out[rid] == ref[rid], rid
+    # and with shared params + greedy decode, re-prefill is exact, so
+    # even the requeued requests reproduce the no-failure tokens
+    assert out == ref
+
+
+def test_failover_speed_match_prefers_matching_standby(tiny):
+    """Two standbys of different speeds: killing the slow replica must
+    draft the slow standby; the fast standby stays in reserve."""
+    params, cfg = tiny
+    router = FleetRouter(
+        [(_engine(params, cfg), sim_node("rtx3080", reliability=1.0)),
+         (_engine(params, cfg), sim_node("a100", reliability=1.0))],
+        [(_engine(params, cfg), sim_node("a100", reliability=1.0)),
+         (_engine(params, cfg), sim_node("rtx3080", reliability=1.0))])
+    for r in _uniform_requests(4, cfg):
+        router.submit(r)
+    router.tick()
+    router.fail_replica(0)                      # the rtx3080 dies
+    done = router.run()
+    assert len(done) == 4
+    drafted = router.replicas[-1]
+    assert drafted.node.device.name == "rtx3080"
+    assert len(router._standby) == 1            # the a100 stayed back
+
+
+def test_simultaneous_deaths_requeue_in_submission_order(tiny):
+    """Two replicas die in ONE heartbeat round: the per-replica drains
+    must merge back into GLOBAL submission order, not interleave the
+    second victim's (younger or older) requests ahead of the first's."""
+    params, cfg = tiny
+    router = FleetRouter(
+        [(_engine(params, cfg), sim_node("rtx4090", reliability=1.0)),
+         (_engine(params, cfg), sim_node("rtx3080", reliability=0.0)),
+         (_engine(params, cfg), sim_node("rtx3080", reliability=0.0))],
+        [(_engine(params, cfg), sim_node("rtx3080", reliability=1.0))],
+        seed=0)
+    for r in _uniform_requests(6, cfg):
+        router.submit(r)
+    for _ in range(2):
+        router.tick()
+    dead = router.heartbeat_round()
+    assert len(dead) == 2
+    # ECT placement: rtx4090 holds reqs 0/3/5, the victims hold 1/4 and
+    # 2 — without the post-drain sort the prepends would leave [2, 1, 4]
+    assert router.stats["requeued"] == 3
+    ids = [r.req_id for r in router.queue]
+    assert len(ids) >= 2 and ids == sorted(ids), ids   # global FIFO
+    done = router.run()
+    assert sorted(r.req_id for r in done) == list(range(6))
+
+
+def test_failover_without_standby_absorbs_on_survivors(tiny):
+    params, cfg = tiny
+    router = FleetRouter([(_engine(params, cfg), "rtx4090"),
+                          (_engine(params, cfg), "rtx3080")])
+    for r in _uniform_requests(5, cfg):
+        router.submit(r)
+    for _ in range(2):
+        router.tick()
+    router.fail_replica(1)
+    done = router.run()
+    assert sorted(r.req_id for r in done) == [0, 1, 2, 3, 4]
+    assert router.stats["replacements"] == 0
+    # everything after the failure ran on the survivor
+    assert sorted(router.replicas[0].served + router.replicas[1].served) \
+        == [0, 1, 2, 3, 4]
+
+
+def test_fleet_death_raises_instead_of_dropping(tiny):
+    params, cfg = tiny
+    router = FleetRouter([(_engine(params, cfg), "rtx4090")])
+    for r in _uniform_requests(3, cfg):
+        router.submit(r)
+    router.tick()
+    router.fail_replica(0)
+    with pytest.raises(RuntimeError):
+        router.run()
