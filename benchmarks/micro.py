@@ -5,10 +5,12 @@ closed-form vs simulator agreement.
 ``engine_bench`` additionally writes the machine-readable perf
 trajectory ``BENCH_engine.json`` at the repo root (decode tok/s dense
 vs paged vs paged-kernel, admission latency, peak concurrency at equal
-cache memory, per-tick HBM bytes kernel vs gather, and the broker-routed
+cache memory, per-tick HBM bytes kernel vs gather, the broker-routed
 ``fleet`` section: placement skew across heterogeneous simulated devices
-+ fleet-vs-single-engine throughput) — CI uploads it as an artifact so
-the trajectory accumulates across PRs."""
++ fleet-vs-single-engine throughput, and the ``prefix`` section:
+prefix-sharing admission-call/concurrency wins at equal pool memory) —
+CI uploads it as an artifact so the trajectory accumulates across
+PRs."""
 from __future__ import annotations
 
 import json
@@ -129,6 +131,7 @@ def engine_bench() -> List[dict]:
     rows.extend(paged_engine_bench(params, cfg, summary))
     rows.extend(paged_kernel_bench(summary))
     rows.extend(fleet_bench(summary))
+    rows.extend(prefix_share_bench(summary))
     with open(BENCH_JSON, "w") as f:
         json.dump(summary, f, indent=1, default=float)
     rows.append({"name": "engine/bench_json", "us_per_call": "",
@@ -372,6 +375,127 @@ def fleet_bench(summary: Optional[dict] = None) -> List[dict]:
             {"name": "fleet/throughput_vs_single_engine",
              "us_per_call": single_s / max(1, toks) * 1e6,
              "derived": f"{single_s / fleet_s:.2f}x_2replicas"}]
+
+
+def prefix_share_bench(summary: Optional[dict] = None) -> List[dict]:
+    """Prefix-sharing paged cache vs independent admissions (the ISSUE 7
+    acceptance bench): 8 requests over the same full-page system prefix,
+    equal pool memory.
+
+    Asserted: (a) admission runs STRICTLY fewer jitted prefill calls than
+    8 independent admissions (shared pages are attached, not re-run),
+    (b) peak concurrent requests STRICTLY exceeds the no-sharing paged
+    engine (shared pages are excluded from the up-front reservation),
+    and (c) every request's greedy output is bitwise-equal to the
+    non-shared engine — including the request whose prompt extends
+    another's (its first divergent append copy-on-writes) and requests
+    requeued through a fleet replica failure (``drain_requests``
+    preserves their prefix digests, the survivor re-shares).  Standalone
+    runs merge the ``prefix`` section into ``BENCH_engine.json``; under
+    ``engine_bench`` the caller owns the write."""
+    import dataclasses
+
+    from repro.configs import get_smoke_config
+    from repro.models.transformer import init_params
+    from repro.serve.engine import Request, ServingEngine
+    from repro.serve.router import FleetRouter, sim_node
+
+    standalone = summary is None
+    if standalone:
+        summary = {}
+        if os.path.exists(BENCH_JSON):
+            with open(BENCH_JSON) as f:
+                summary = json.load(f)
+    cfg = dataclasses.replace(get_smoke_config("gpt3-24l"), vocab_size=128,
+                              d_model=128, d_ff=256, n_heads=4, n_kv_heads=4,
+                              head_dim=32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    page, pool = 8, 12
+    prefix = list(range(1, 17))               # two full shared pages
+    prompts = [prefix + [100 + i] for i in range(8)]
+    prompts[1] = prompts[0] + [60]            # extends req 0 -> CoW on append
+
+    def drive(share: bool):
+        eng = ServingEngine(params, cfg, slots=8, cache_len=64, chunk=4,
+                            paged=True, page_size=page, num_blocks=pool,
+                            share_prefix=share)
+        eng.warmup()
+        for i, p in enumerate(prompts):
+            eng.submit(Request(i, p, max_new=8))
+        peak, ticks = 0, 0
+        t0 = time.perf_counter()
+        while eng.tick() or eng.queue:
+            peak, ticks = max(peak, eng.n_active), ticks + 1
+        jax.block_until_ready(eng.caches)
+        wall = time.perf_counter() - t0
+        outs = {r.req_id: r.generated for r in eng.finished}
+        return eng, outs, peak, ticks, wall
+
+    ind, ind_out, ind_peak, ind_ticks, ind_s = drive(False)
+    shr, shr_out, shr_peak, shr_ticks, shr_s = drive(True)
+    ind_calls = ind.stats["prefill_calls"]
+    shr_calls = shr.stats["prefill_calls"]
+    assert shr_calls < ind_calls, (
+        f"prefix sharing must run strictly fewer jitted prefill calls "
+        f"than independent admissions: {shr_calls} vs {ind_calls}")
+    assert shr_peak > ind_peak, (
+        f"prefix sharing must raise peak concurrency at equal pool "
+        f"memory: {shr_peak} vs {ind_peak}")
+    assert shr.stats["cow_copies"] >= 1     # the divergent-append copy
+    assert shr_out == ind_out, "sharing changed greedy decode output"
+
+    # fleet failover requeue: both same-prefix requests co-locate on
+    # replica 0 (near-tie affinity), die with it mid-decode, requeue
+    # WITH their prefix digests, re-share on the survivor — outputs must
+    # match the non-shared single-engine run bitwise
+    def rep():
+        return ServingEngine(params, cfg, slots=2, cache_len=64, chunk=4,
+                             paged=True, page_size=page)
+    router = FleetRouter([(rep(), sim_node("rtx4090")),
+                          (rep(), sim_node("rtx4090"))])
+    router.submit(Request(0, prompts[0], max_new=18))
+    router.tick()
+    router.submit(Request(2, prompts[2], max_new=40))
+    for _ in range(3):
+        router.tick()
+    victims = [rid for rid, pl in router.placements.items() if pl == [0]]
+    router.fail_replica(0)
+    fleet_out = {r.req_id: r.generated for r in router.run()}
+    survivor = next(r for r in router.replicas if r.alive)
+    assert len(victims) == 2 and survivor.engine.stats["shared_pages"] > 0
+    assert fleet_out[0][:8] == ind_out[0] and fleet_out[2][:8] == ind_out[2], \
+        "failover requeue changed greedy decode output"
+
+    summary["prefix"] = {
+        "requests": len(prompts), "prefix_tokens": len(prefix),
+        "page_size": page, "pool_pages": pool,
+        "prefill_calls": {"shared": shr_calls, "independent": ind_calls},
+        "call_reduction": ind_calls / shr_calls,
+        "peak_concurrency_equal_mem": {"shared": shr_peak,
+                                       "independent": ind_peak},
+        "shared_pages": shr.stats["shared_pages"],
+        "shared_tokens": shr.stats["shared_tokens"],
+        "cow_copies": shr.stats["cow_copies"],
+        "ticks": {"shared": shr_ticks, "independent": ind_ticks},
+        "wall_s": {"shared": shr_s, "independent": ind_s},
+        "bitwise_equal": True,
+        "failover_requeue": {"victims": len(victims),
+                             "survivor_shared_pages":
+                                 survivor.engine.stats["shared_pages"],
+                             "bitwise_equal": True},
+    }
+    if standalone:
+        with open(BENCH_JSON, "w") as f:
+            json.dump(summary, f, indent=1, default=float)
+    return [{"name": "engine/prefix_share_8req",
+             "us_per_call": shr_s / max(1, shr_ticks) * 1e6,
+             "derived": f"calls{shr_calls}vs{ind_calls}_"
+                        f"peak{shr_peak}vs{ind_peak}_cow"
+                        f"{shr.stats['cow_copies']}"},
+            {"name": "engine/prefix_share_failover_requeue",
+             "us_per_call": "",
+             "derived": f"requeued{len(victims)}_reshared"
+                        f"{survivor.engine.stats['shared_pages']}pages"}]
 
 
 def scheduler_bench() -> List[dict]:

@@ -34,10 +34,11 @@ def main() -> None:
         ("table1", figures.table1_cost),
         ("claims", figures.paper_claims_check),
         ("kernels", micro.kernel_bench),
-        ("engine", micro.engine_bench),   # includes the fleet section
-        # explicit-only (via --only fleet): engine_bench already runs it,
-        # so a no-filter run must not repeat the whole fleet workload
+        ("engine", micro.engine_bench),   # includes fleet + prefix sections
+        # explicit-only (via --only fleet/prefix): engine_bench already
+        # runs them, so a no-filter run must not repeat the workloads
         ("fleet:only", micro.fleet_bench),
+        ("prefix:only", micro.prefix_share_bench),
         ("scheduler", micro.scheduler_bench),
         ("compression", micro.compression_bench),
         ("pipeline", micro.pipeline_bench),

@@ -26,12 +26,13 @@ from repro.models.transformer import init_params
 from repro.serve.engine import Request, ServingEngine, generate
 
 
-def serve(params, cfg, args, paged: bool, use_kernel: bool = False):
+def serve(params, cfg, args, paged: bool, use_kernel: bool = False,
+          share: bool = True):
     engine = ServingEngine(params, cfg, slots=args.slots, cache_len=96,
                            chunk=args.chunk, paged=paged,
                            page_size=args.page_size,
                            num_blocks=args.num_blocks or None,
-                           use_kernel=use_kernel)
+                           use_kernel=use_kernel, share_prefix=share)
     sample_kw = dict(temperature=args.temperature, top_p=args.top_p,
                      top_k=args.top_k, rep_penalty=args.rep_penalty)
     # first wave
@@ -85,9 +86,18 @@ def main():
           f"{st['admitted']} admissions, {st['backpressure']} backpressure")
     for r in done:
         print(f"  req{r.req_id:3d} prompt={r.prompt} -> {r.generated}")
-    # admission cost is ceil(S/chunk) steps per prompt, never S
+    # admission cost is ceil(S/chunk) steps per prompt, never S — and
+    # prefix sharing can only LOWER it (shared pages skip their chunks)
     expected = sum(math.ceil(len(r.prompt) / engine.chunk) for r in done)
-    assert st["prefill_calls"] == expected, (st["prefill_calls"], expected)
+    if engine._can_share:
+        assert st["prefill_calls"] <= expected, (st["prefill_calls"],
+                                                 expected)
+        print(f"  prefix sharing: {st['shared_pages']} pages attached, "
+              f"{st['shared_tokens']} prompt tokens skipped prefill, "
+              f"{st['cow_copies']} copy-on-write")
+    else:
+        assert st["prefill_calls"] == expected, (st["prefill_calls"],
+                                                 expected)
     if cfg.n_experts:
         # MoE capacity-factor dropping couples slots through the shared
         # per-batch expert budget (ROADMAP "MoE chunked-prefill parity"),
@@ -112,6 +122,12 @@ def main():
         dense = sorted(other.finished, key=lambda r: r.req_id)
         assert [r.generated for r in done] == [r.generated for r in dense]
         print("paged decode == dense decode ✓")
+        if engine._can_share:
+            private, _ = serve(params, cfg, args, paged=True, share=False)
+            ns = sorted(private.finished, key=lambda r: r.req_id)
+            assert [r.generated for r in done] == [r.generated for r in ns]
+            assert st["prefill_calls"] <= private.stats["prefill_calls"]
+            print("prefix-shared decode == private-pages decode ✓")
         if args.kernel:
             scan, _ = serve(params, cfg, args, paged=True, use_kernel=False)
             spath = sorted(scan.finished, key=lambda r: r.req_id)

@@ -11,6 +11,11 @@ cache memory is ceil((prompt + max_new) / page_size) pages from a shared
 ``--num-blocks`` pool instead of one worst-case ``cache_len`` per slot,
 and the queue backpressures when the pool is exhausted.  ``--no-paged``
 selects the dense per-slot ring caches (bitwise reference semantics).
+Paged mode shares identical prompt-prefix pages content-addressed
+(stored once, refcounted, copy-on-write on divergence — skipped pages
+skip their prefill compute too); ``--no-prefix-share`` disables it and
+``--prefix-tokens N`` prepends a common system prompt so the fast path
+has traffic to hit.
 ``--temperature``/``--top-p``/``--top-k``/``--rep-penalty`` sample
 in-jit with per-slot PRNG streams (temperature 0 = greedy,
 bitwise-stable; the repetition penalty reads an in-jit per-slot
@@ -67,6 +72,15 @@ def main():
     ap.add_argument("--num-blocks", type=int, default=0,
                     help="pool size in pages; 0 = same memory as the dense "
                          "cache (slots * cache_len / page_size)")
+    ap.add_argument("--no-prefix-share", dest="prefix_share",
+                    action="store_false", default=True,
+                    help="disable content-addressed prefix sharing "
+                         "(paged mode: identical prompt-prefix pages are "
+                         "stored once, attached by refcount, and "
+                         "copy-on-write on divergence)")
+    ap.add_argument("--prefix-tokens", type=int, default=0,
+                    help="prepend this many shared system-prompt tokens "
+                         "to every request (exercises prefix sharing)")
     ap.add_argument("--kernel", action="store_true",
                     help="decode attention through the fused Pallas "
                          "paged-decode kernel (paged mode only; interpret "
@@ -110,7 +124,8 @@ def main():
                              cache_len=args.cache_len, chunk=args.chunk,
                              paged=args.paged, page_size=args.page_size,
                              num_blocks=args.num_blocks or None,
-                             use_kernel=args.kernel, seed=args.seed)
+                             use_kernel=args.kernel, seed=args.seed,
+                             share_prefix=args.prefix_share)
 
     if args.replicas > 1:
         serve_fleet(args, cfg, build_engine)
@@ -123,10 +138,11 @@ def main():
         print(f"warmup: compiled prefill ({args.slots},{engine.chunk}) + "
               f"decode ({args.slots},1) in {time.time() - t0:.2f}s")
     key = jax.random.PRNGKey(args.seed + 1)
+    system = _system_prefix(args, cfg)
     for i in range(args.requests):
         key, sub = jax.random.split(key)
-        prompt = jax.random.randint(sub, (4 + i % 4,), 0,
-                                    cfg.vocab_size).tolist()
+        prompt = system + jax.random.randint(sub, (4 + i % 4,), 0,
+                                             cfg.vocab_size).tolist()
         engine.submit(Request(i, prompt, max_new=args.max_new,
                               temperature=args.temperature,
                               top_p=args.top_p, top_k=args.top_k,
@@ -144,8 +160,22 @@ def main():
     print(f"  engine calls: {st['prefill_calls']} prefill (chunk="
           f"{engine.chunk}) + {st['decode_calls']} decode ticks, "
           f"{st['admitted']} admissions, {st['backpressure']} backpressure")
+    if engine._can_share:
+        print(f"  prefix sharing: {st['shared_pages']} pages attached "
+              f"({st['shared_tokens']} prompt tokens skipped prefill), "
+              f"{st['cow_copies']} copy-on-write")
     for r in sorted(done, key=lambda r: r.req_id)[:4]:
         print(f"  req{r.req_id}: prompt={r.prompt} -> {r.generated}")
+
+
+def _system_prefix(args, cfg):
+    """--prefix-tokens: a deterministic shared system prompt prepended to
+    every request so the prefix-sharing fast path has something to hit."""
+    if not args.prefix_tokens:
+        return []
+    key = jax.random.PRNGKey(args.seed + 7)
+    return jax.random.randint(key, (args.prefix_tokens,), 0,
+                              cfg.vocab_size).tolist()
 
 
 def serve_fleet(args, cfg, build_engine):
@@ -172,10 +202,11 @@ def serve_fleet(args, cfg, build_engine):
               f"{time.time() - t0:.2f}s (standby replicas compile when "
               f"drafted)")
     key = jax.random.PRNGKey(args.seed + 1)
+    system = _system_prefix(args, cfg)
     for i in range(args.requests):
         key, sub = jax.random.split(key)
-        prompt = jax.random.randint(sub, (4 + i % 4,), 0,
-                                    cfg.vocab_size).tolist()
+        prompt = system + jax.random.randint(sub, (4 + i % 4,), 0,
+                                             cfg.vocab_size).tolist()
         router.submit(Request(i, prompt, max_new=args.max_new,
                               temperature=args.temperature,
                               top_p=args.top_p, top_k=args.top_k,
@@ -191,6 +222,12 @@ def serve_fleet(args, cfg, build_engine):
     print(f"  router: {st['placed']} placements, {st['held']} held ticks, "
           f"{st['failures']} failures, {st['requeued']} requeued, "
           f"{st['replacements']} drafted from backup")
+    shared = sum(r.engine.stats.get("shared_pages", 0)
+                 for r in router.replicas)
+    cow = sum(r.engine.stats.get("cow_copies", 0) for r in router.replicas)
+    if any(r.engine._can_share for r in router.replicas):
+        print(f"  prefix sharing: {shared} pages attached fleet-wide, "
+              f"{cow} copy-on-write")
     for rep in sorted(router.replicas, key=lambda r: r.replica_id):
         state = "live" if rep.alive else "DEAD"
         print(f"  replica {rep.replica_id} [{rep.node.device.name}, "

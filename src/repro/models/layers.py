@@ -287,6 +287,11 @@ def attn_apply(p: dict, x: Array, cfg, *, positions: Array,
     attn_table = None
     if cache is not None and table is not None:
         # ---- paged pool + block table ---------------------------------
+        # per-cache-kind tables: engines with split block-id spaces pass
+        # {"attn": (B, n_cols), "swa": (B, ring_blocks)}; a bare array is
+        # one shared table for every attention-family layer (back-compat)
+        if isinstance(table, dict):
+            table = table["swa" if window > 0 else "attn"]
         page = cache["k"].shape[1]
         if window > 0:
             nb = swa_ring_blocks(window, page, table.shape[1])

@@ -106,6 +106,10 @@ def mla_apply(p: dict, x: Array, cfg, *, positions: Array,
 
     new_cache = None
     attn_table = None
+    if isinstance(table, dict):
+        # per-cache-kind block tables (see attn_apply): MLA layers are
+        # full-attention kind and read the "attn" table
+        table = table["attn"]
     if cache is not None and table is not None:
         from repro.models.layers import gather_pages, gather_pos, ring_write
         new_cache = {

@@ -49,14 +49,21 @@ def layer_init(key, spec, cfg: ModelConfig) -> dict:
 
 def layer_cache_init(spec, cfg: ModelConfig, batch: int, cache_len: int,
                      dtype=jnp.bfloat16, *, paged: bool = False,
-                     page_size: int = 16, num_blocks: int = 0):
+                     page_size: int = 16, num_blocks: int = 0,
+                     num_blocks_swa: Optional[int] = None):
     """Dense per-slot cache, or (``paged=True``) a shared block pool of
     ``num_blocks`` pages per attention-family layer.  SSM/RWKV state is
-    per-slot either way (a recurrent carry has no sequence axis to page)."""
+    per-slot either way (a recurrent carry has no sequence axis to page).
+
+    ``num_blocks_swa``: sliding-window layers cycle over at most
+    ``ceil(window / page_size)`` ring pages per slot, so their pools live
+    in a separate, much smaller block-id space (the engine's dedicated
+    SWA allocator/table) instead of full-attention-sized pools.  Defaults
+    to ``num_blocks`` (single shared id space) for direct callers."""
     if paged and spec.mixer in (ATTN, SWA):
-        # SWA layers share the pool shape and cycle over ring pages via
-        # the block table (see ``swa_ring_blocks``); one block-id space
-        # per model keeps the host-side allocator uniform.
+        if spec.mixer == SWA:
+            num_blocks = (num_blocks_swa if num_blocks_swa is not None
+                          else num_blocks)
         if cfg.use_mla:
             return mla.mla_paged_cache_init(num_blocks, page_size, cfg, dtype)
         return paged_cache_init(num_blocks, page_size, cfg.n_kv_heads,
@@ -180,15 +187,20 @@ def init_params(rng, cfg: ModelConfig) -> dict:
 
 def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
                dtype=jnp.bfloat16, *, paged: bool = False,
-               page_size: int = 16, num_blocks: Optional[int] = None) -> dict:
+               page_size: int = 16, num_blocks: Optional[int] = None,
+               num_blocks_swa: Optional[int] = None) -> dict:
     """Decode-cache pytree.  ``paged=True`` replaces the dense per-slot
     (batch, cache_len, ...) attention caches with per-layer block pools of
     ``num_blocks`` pages (default: the same total memory as the dense
     cache, ceil(batch * cache_len / page_size) blocks) addressed through a
-    host-managed block table — see ``repro.serve.engine.ServingEngine``."""
+    host-managed block table — see ``repro.serve.engine.ServingEngine``.
+    ``num_blocks_swa`` sizes sliding-window layer pools separately
+    (``ceil(window/page)`` ring pages per slot suffice); None keeps one
+    shared id space."""
     if num_blocks is None:
         num_blocks = max(1, -(-batch * cache_len // page_size))
-    kw = dict(paged=paged, page_size=page_size, num_blocks=num_blocks)
+    kw = dict(paged=paged, page_size=page_size, num_blocks=num_blocks,
+              num_blocks_swa=num_blocks_swa)
     caches = {}
     if cfg.prefix_layers:
         caches["prefix"] = tuple(

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.config import ATTN, SWA, ModelConfig
+from repro.models.config import ATTN, MAMBA, RWKV, SWA, ModelConfig
 from repro.models.layers import NEG_INF, swa_ring_blocks
 from repro.models.transformer import forward, init_cache, unembed
 
@@ -224,10 +224,15 @@ class Request:
     generated: List[int] = field(default_factory=list)
     pending: int = -1            # next token to feed/emit
     done: bool = False
+    # chain digests of the prompt's full prefix pages, stamped by
+    # drain_requests() so a failover requeue keeps its prefix identity
+    # for the router's affinity tie-break (None until drained)
+    prefix_digests: Optional[List[int]] = None
 
 
 class BlockAllocator:
-    """Host-side free-list over the paged cache pool.
+    """Host-side free-list over the paged cache pool, **reference-counted
+    and content-addressed**.
 
     Admission is **reservation-based**: a request reserves its worst case
     (``ceil((prompt + max_new) / page_size)`` pages) up front, takes pages
@@ -236,12 +241,32 @@ class BlockAllocator:
     are guaranteed allocatable, decode-time extends can never fail —
     pool exhaustion surfaces only as admission backpressure (the queue
     waits) instead of a mid-decode crash.
-    """
+
+    **Refcounts**: ``alloc_one`` hands out a page at refcount 1;
+    ``share`` bumps it (a second slot's table row now points at the same
+    physical page); ``free`` decrements and only returns a page to the
+    free list — and reports it in its return value, so the engine scrubs
+    it — when the count reaches zero.  Freeing an unheld page asserts
+    (double-free protection).
+
+    **Content addressing**: ``register`` maps a prefix-page digest to a
+    resident block; ``lookup`` resolves a digest back to the block.  A
+    ``check`` value (parent block id + the page's exact tokens) rides
+    along with every registration: lookup verifies it, so a digest
+    collision falls back to a miss (the caller allocates a private page)
+    instead of silently attaching wrong content.  Because the check
+    chains through parent *block ids*, matching check values imply
+    byte-identical token prefixes by induction.  Registrations hold no
+    refcount of their own and are dropped when the block is physically
+    freed."""
 
     def __init__(self, num_blocks: int):
         self.num_blocks = num_blocks
         self._free = list(range(num_blocks - 1, -1, -1))
         self.reserved = 0
+        self.refcount: Dict[int, int] = {}
+        self._by_digest: Dict[int, int] = {}       # digest -> block
+        self._entries: Dict[int, tuple] = {}       # block -> (digest, check)
 
     @property
     def n_free(self) -> int:
@@ -258,18 +283,67 @@ class BlockAllocator:
         return True
 
     def alloc_one(self) -> int:
-        """Take one page against an existing reservation."""
+        """Take one page against an existing reservation (refcount 1)."""
         assert self._free, "BlockAllocator: reservation invariant violated"
         self.reserved -= 1
         assert self.reserved >= 0, "alloc_one without a reservation"
-        return self._free.pop()
+        b = self._free.pop()
+        self.refcount[b] = 1
+        return b
 
-    def free(self, blocks: List[int], unreserve: int = 0) -> None:
-        dup = set(blocks) & set(self._free)
-        assert not dup, f"BlockAllocator: double free of {sorted(dup)}"
-        self._free.extend(blocks)
+    def share(self, block: int) -> None:
+        """Another table row now references ``block``."""
+        assert self.refcount.get(block, 0) > 0, \
+            f"BlockAllocator: share of unheld block {block}"
+        self.refcount[block] += 1
+
+    def lookup(self, digest: int, check: tuple) -> Optional[int]:
+        """Resolve a prefix-page digest to its resident block, or None on
+        a miss or a verified hash collision (check mismatch)."""
+        b = self._by_digest.get(digest)
+        if b is None or self._entries[b][1] != check:
+            return None
+        return b
+
+    def register(self, digest: int, check: tuple, block: int) -> bool:
+        """Advertise ``block`` as holding the prefix page ``digest``.
+        First registration wins (an existing entry — including a
+        colliding one — is kept); a block advertises one digest."""
+        if digest in self._by_digest or block in self._entries:
+            return False
+        self._by_digest[digest] = block
+        self._entries[block] = (digest, check)
+        return True
+
+    def deregister(self, block: int) -> None:
+        """Drop the block's digest advertisement (content is about to
+        diverge, or the block is being physically freed)."""
+        ent = self._entries.pop(block, None)
+        if ent is not None:
+            self._by_digest.pop(ent[0], None)
+
+    def is_registered(self, block: int) -> bool:
+        return block in self._entries
+
+    def free(self, blocks: List[int], unreserve: int = 0) -> List[int]:
+        """Drop one reference per listed block.  Returns the blocks whose
+        refcount reached zero — ONLY those went back to the free list and
+        only those may (and must) be scrubbed; pages still shared by
+        another slot stay live and untouched."""
+        freed: List[int] = []
+        for b in blocks:
+            rc = self.refcount.get(b, 0)
+            assert rc > 0, f"BlockAllocator: double free of [{b}]"
+            if rc == 1:
+                del self.refcount[b]
+                self.deregister(b)
+                self._free.append(b)
+                freed.append(b)
+            else:
+                self.refcount[b] = rc - 1
         self.reserved -= unreserve
         assert self.reserved >= 0 and self.n_free <= self.num_blocks
+        return freed
 
 
 def _clear_slot(caches, s, skip_pools: bool = False):
@@ -299,23 +373,62 @@ def _clear_slot(caches, s, skip_pools: bool = False):
     return jax.tree_util.tree_map_with_path(clear, caches)
 
 
-def _clear_blocks(caches, blocks):
-    """Scrub the given pool blocks in every paged cache leaf: keys/values
-    to 0 and positions to -1, so a recycled block can never leak a stale
-    key into its next owner (old positions could pass the causal mask).
-    ``blocks`` is a fixed-width int32 vector padded with an out-of-pool
-    id (scatter mode='drop' ignores the padding), so the jit compiles
-    once regardless of how many blocks a request held."""
-    def clear(path, leaf):
+def _pool_mixer(cfg: ModelConfig, path) -> str:
+    """Mixer kind ("attn" / "swa" / ...) of the layer owning a pool leaf,
+    from the leaf's pytree path.  Per-cache-kind pools give SWA layers
+    their own (smaller) block-id space, so scrubs must route each block
+    vector to the right pools — decided on the structural path (prefix
+    index / period index), never on shape coincidences."""
+    top = str(getattr(path[0], "key", path[0]))
+    idx = getattr(path[1], "idx", None)
+    specs = cfg.prefix_layers if top == "prefix" else cfg.period
+    return specs[idx].mixer
+
+
+def make_clear_blocks(cfg: ModelConfig) -> Callable:
+    """(caches, blocks, blocks_swa) -> caches.  Scrub the given pool
+    blocks in every paged cache leaf: keys/values to 0 and positions to
+    -1, so a recycled block can never leak a stale key into its next
+    owner (old positions could pass the causal mask).  Full-attention
+    pools take ids from ``blocks``, sliding-window pools from
+    ``blocks_swa`` — the two block-id spaces are disjoint per-kind pools.
+    Each vector is fixed-width int32 padded with an out-of-pool id
+    (scatter mode='drop' ignores the padding), so the jit compiles once
+    regardless of how many blocks a request held."""
+    def clear_blocks(caches, blocks, blocks_swa):
+        def clear(path, leaf):
+            name = str(getattr(path[-1], "key", path[-1]))
+            if name not in POOL_LEAVES:
+                return leaf
+            top = str(getattr(path[0], "key", path[0]))
+            bdim = 1 if top == "stack" else 0
+            ids = blocks_swa if _pool_mixer(cfg, path) == SWA else blocks
+            idx = (slice(None),) * bdim + (ids,)
+            fill = -1 if name == "pos" else 0
+            return leaf.at[idx].set(jnp.asarray(fill, leaf.dtype),
+                                    mode="drop")
+        return jax.tree_util.tree_map_with_path(clear, caches)
+    return clear_blocks
+
+
+def _copy_block(caches, src, dst):
+    """Copy-on-write: duplicate pool page ``src`` into ``dst`` across
+    every paged cache leaf (keys, values, positions).  Used when a slot
+    holding a shared prefix page is about to write into it — the write
+    lands in the private copy, so shared pages are never mutated.
+    ``src``/``dst`` are traced scalars: one compile covers every pair.
+    (Prefix sharing is gated to models whose paged pools are all
+    full-attention kind, so no per-kind routing is needed here.)"""
+    def cp(path, leaf):
         name = str(getattr(path[-1], "key", path[-1]))
         if name not in POOL_LEAVES:
             return leaf
         top = str(getattr(path[0], "key", path[0]))
         bdim = 1 if top == "stack" else 0
-        idx = (slice(None),) * bdim + (blocks,)
-        fill = -1 if name == "pos" else 0
-        return leaf.at[idx].set(jnp.asarray(fill, leaf.dtype), mode="drop")
-    return jax.tree_util.tree_map_with_path(clear, caches)
+        src_idx = (slice(None),) * bdim + (src,)
+        dst_idx = (slice(None),) * bdim + (dst,)
+        return leaf.at[dst_idx].set(leaf[src_idx])
+    return jax.tree_util.tree_map_with_path(cp, caches)
 
 
 class ServingEngine:
@@ -343,11 +456,25 @@ class ServingEngine:
     When the pool cannot cover a reservation the queue backpressures
     (``stats["backpressure"]``) until a running request finishes; decode
     of admitted requests NEVER stalls on allocation (reservations make
-    extends infallible).  Sliding-window layers cycle over the first
-    ``ceil(window / page_size)`` table columns as ring pages; SSM/RWKV
-    state stays per-slot (a recurrent carry has no sequence axis).
-    ``paged=False`` selects the dense per-slot ring caches, which remain
-    the bitwise reference semantics.
+    extends infallible).  Sliding-window layers draw ring pages from a
+    separate exact-fit per-kind pool of ``slots * ceil(window /
+    page_size)`` pages with its own block table (hybrids pass a
+    ``{"attn", "swa"}`` table dict into the step); SSM/RWKV state stays
+    per-slot (a recurrent carry has no sequence axis).  ``paged=False``
+    selects the dense per-slot ring caches, which remain the bitwise
+    reference semantics.
+
+    **Prefix sharing** (``share_prefix=True``, the default, paged
+    full-attention/MLA models): prompt-prefix pages are
+    content-addressed in the allocator (chain digests + collision-proof
+    check values); admission ATTACHES resident pages — table points at
+    the existing block, refcount++, prefill chunks skipped, reservation
+    reduced — and the first write into a shared page copies-on-write,
+    so shared pages are never mutated and greedy decode stays
+    bitwise-identical to the non-shared engine.  Pages physically free
+    (and scrub) only at refcount zero.  See serve/README.md for the
+    full page lifecycle; ``stats`` tracks ``shared_pages`` /
+    ``shared_tokens`` / ``cow_copies``.
 
     **Kernel mode** (``use_kernel=True``, paged engines only): the S=1
     decode tick dispatches attention to the fused Pallas paged-decode
@@ -382,7 +509,8 @@ class ServingEngine:
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
                  cache_len: int = 512, chunk: int = 32, paged: bool = False,
                  page_size: int = 16, num_blocks: Optional[int] = None,
-                 use_kernel: bool = False, seed: int = 0):
+                 use_kernel: bool = False, share_prefix: bool = True,
+                 seed: int = 0):
         self.params = params
         self.cfg = cfg
         self.slots = slots
@@ -403,7 +531,16 @@ class ServingEngine:
         specs = tuple(cfg.prefix_layers) + tuple(cfg.period)
         self._has_attn = any(s.mixer == ATTN for s in specs)
         self._has_swa = any(s.mixer == SWA for s in specs)
+        self._has_recurrent = any(s.mixer in (MAMBA, RWKV) for s in specs)
         self._bounded_ctx = self._has_attn
+        # prefix sharing holds only where skipping prefill compute for a
+        # page leaves NO other state stale: recurrent carries would still
+        # need the skipped tokens, SWA ring pages get overwritten in
+        # place, and MoE capacity truncation depends on the chunk shape
+        # (so a shorter tail would not be bitwise-reproducing).
+        self._can_share = (paged and share_prefix and self._has_attn
+                           and not self._has_swa and not self._has_recurrent
+                           and not cfg.n_experts)
         if paged:
             self.n_cols = max(1, -(-cache_len // page_size))
             self.num_blocks = (num_blocks if num_blocks is not None
@@ -414,11 +551,25 @@ class ServingEngine:
                                  if self._has_swa else 0)
             self._table = np.full((slots, self.n_cols), -1, np.int32)
             self._slot_reserved = [0] * slots
+            # per-cache-kind pools: SWA layers cycle over at most
+            # ring_blocks pages per slot, so their pools get their own
+            # exact-fit block-id space (slots * ring_blocks pages) instead
+            # of full-attention-sized ones — an exact fit can never
+            # backpressure, and hybrid models stop paying full-length
+            # pool memory for windowed layers.
+            self.num_blocks_swa = slots * self._ring_blocks
+            if self._has_swa:
+                self._alloc_swa = BlockAllocator(self.num_blocks_swa)
+                self._table_swa = np.full((slots, self._ring_blocks), -1,
+                                          np.int32)
+                self._slot_reserved_swa = [0] * slots
             self.caches = init_cache(cfg, slots, cache_len, paged=True,
                                      page_size=page_size,
-                                     num_blocks=self.num_blocks)
+                                     num_blocks=self.num_blocks,
+                                     num_blocks_swa=self.num_blocks_swa)
         else:
             self.num_blocks = 0
+            self.num_blocks_swa = 0
             self._table = np.zeros((slots, 1), np.int32)   # dummy, unread
             self.caches = init_cache(cfg, slots, cache_len)
         # buffer donation is a no-op on CPU and would only warn
@@ -429,7 +580,8 @@ class ServingEngine:
             make_engine_step(cfg, paged=paged,
                              use_kernel=self.use_kernel), **dn)
         self._reset_fn = jax.jit(partial(_clear_slot, skip_pools=paged), **d0)
-        self._clear_blocks_fn = jax.jit(_clear_blocks, **d0)
+        self._clear_blocks_fn = jax.jit(make_clear_blocks(cfg), **d0)
+        self._copy_block_fn = jax.jit(_copy_block, **d0)
         self._clear_seen_fn = jax.jit(
             lambda seen, s: seen.at[s].set(False), **d0)
         self._seen = jnp.zeros((slots, cfg.vocab_size), jnp.bool_)
@@ -437,8 +589,12 @@ class ServingEngine:
         self.positions = [0] * slots
         self.queue: List[Request] = []
         self.finished: List[Request] = []
+        # table columns of slot s currently mapped to a SHARED page (a
+        # write into one copies first — see _ensure_blocks)
+        self._slot_shared: List[set] = [set() for _ in range(slots)]
         self.stats = {"prefill_calls": 0, "decode_calls": 0, "admitted": 0,
-                      "backpressure": 0}
+                      "backpressure": 0, "shared_pages": 0,
+                      "shared_tokens": 0, "cow_copies": 0}
         self._seed = seed
         self._step_seq = 0
         self._admit_seq = 0
@@ -451,29 +607,170 @@ class ServingEngine:
     # -- paged-pool bookkeeping (host side) -----------------------------
 
     def _blocks_for(self, logical_len: int) -> int:
-        """Pages a request of total logical length ``logical_len`` can
-        ever touch: its own ceil(len/page) for bounded (full-attention)
-        context, the SWA ring size for window-only models, zero for pure
-        recurrent models."""
-        if not self.paged:
+        """Full-attention pool pages a request of total logical length
+        ``logical_len`` can ever touch (its own ceil(len/page), bounded
+        by the table width).  Zero for models without full-attention
+        layers: SWA rings live in their own exact-fit pool that can never
+        backpressure, recurrent state is per-slot."""
+        if not self.paged or not self._has_attn:
             return 0
-        nb = -(-logical_len // self.page_size)
-        if self._has_attn:
-            return min(nb, self.n_cols)
-        if self._has_swa:
-            return min(nb, self._ring_blocks)
-        return 0
+        return min(-(-logical_len // self.page_size), self.n_cols)
+
+    def _blocks_for_swa(self, logical_len: int) -> int:
+        """SWA ring pages the request will occupy (bounded by the ring)."""
+        if not self.paged or not self._has_swa:
+            return 0
+        return min(-(-logical_len // self.page_size), self._ring_blocks)
+
+    # -- content-addressed prefix pages ---------------------------------
+
+    @staticmethod
+    def _digest(payload) -> int:
+        """Digest of one prefix page: payload chains the parent page's
+        digest with this page's tokens, so equal digests (plus the
+        allocator's check verification) mean equal FULL token prefixes —
+        a page's KV content depends on everything before it, not just its
+        own tokens.  Static so tests can monkeypatch it (e.g. to a
+        constant, forcing collisions) per engine instance."""
+        return hash(payload)
+
+    def prefix_digests(self, prompt: List[int]) -> List[int]:
+        """Chain digests of every FULL page of ``prompt`` — the
+        content-address trail the fleet router uses for prefix-affinity
+        placement (and that ``drain_requests`` pins to failover
+        requeues)."""
+        P = self.page_size
+        out: List[int] = []
+        prev = 0
+        for i in range(len(prompt) // P):
+            prev = self._digest((prev, tuple(prompt[i * P:(i + 1) * P])))
+            out.append(prev)
+        return out
+
+    def _match_prefix(self, prompt: List[int]):
+        """Resolve the longest resident shared prefix of ``prompt``.
+        Returns (shared_tokens, full_hits, partial_hit):
+
+        * full_hits — [(col, block)] for each leading FULL page resident
+          in the pool (contiguous: a registrant registered all its full
+          pages, so the first miss ends the chain);
+        * partial_hit — (col, block, covered) when a registered
+          PARTIAL page (another request's trailing prompt page) extends
+          the match past the last full hit — attaching it shares the page
+          first and copy-on-writes when the divergent tail is appended.
+        """
+        P = self.page_size
+        S = len(prompt)
+        hits: List[Tuple[int, int]] = []
+        prev_d, prev_b = 0, -1
+        m = 0
+        for i in range(S // P):
+            page = tuple(prompt[i * P:(i + 1) * P])
+            d = self._digest((prev_d, page))
+            b = self._alloc.lookup(d, (prev_b, page))
+            if b is None:
+                break
+            hits.append((i, b))
+            prev_d, prev_b = d, b
+            m += 1
+        partial = None
+        best = 0
+        for j in range(m * P + 1, min(S, (m + 1) * P) + 1):
+            tail = tuple(prompt[m * P:j])
+            d = self._digest((prev_d, tail, "partial"))
+            b = self._alloc.lookup(d, (prev_b, tail, "partial"))
+            if b is not None and j > best:
+                partial, best = (m, b, j), j
+        return (best if partial else m * P), hits, partial
+
+    def shared_prefix_pages(self, prompt: List[int]) -> int:
+        """How many of the request's prefix pages are resident RIGHT NOW
+        (full-page hits + a trailing partial hit) — the router's
+        prefix-affinity signal.  0 for engines that cannot share."""
+        if not self._can_share:
+            return 0
+        _, hits, partial = self._match_prefix(prompt)
+        return len(hits) + (1 if partial else 0)
+
+    def prefill_calls_for(self, prompt: List[int]) -> int:
+        """Jitted chunked-prefill calls admitting ``prompt`` would cost
+        NOW: shared resident prefix pages are skipped, only the unshared
+        tail (at least one token — the last prompt token must produce
+        logits) runs through the step function."""
+        S = len(prompt)
+        if self._can_share:
+            shared, _, _ = self._match_prefix(prompt)
+            S -= min(shared, S - 1)
+        return -(-S // self.chunk)
+
+    def _register_prefix(self, s: int, prompt: List[int]) -> None:
+        """Advertise slot ``s``'s freshly admitted prompt pages in the
+        allocator's content registry: every FULL page under its chain
+        digest, plus the trailing partial page (if any) so an
+        exact-or-longer prompt can attach it and CoW on divergence.
+        First registration wins; a collision (digest taken by different
+        content) simply leaves our private page unadvertised."""
+        P = self.page_size
+        S = len(prompt)
+        prev_d, prev_b = 0, -1
+        for i in range(S // P):
+            page = tuple(prompt[i * P:(i + 1) * P])
+            d = self._digest((prev_d, page))
+            b = int(self._table[s, i])
+            self._alloc.register(d, (prev_b, page), b)
+            canon = self._alloc.lookup(d, (prev_b, page))
+            prev_d, prev_b = d, (canon if canon is not None else b)
+        if S % P:
+            tail = tuple(prompt[(S // P) * P:])
+            d = self._digest((prev_d, tail, "partial"))
+            self._alloc.register(d, (prev_b, tail, "partial"),
+                                 int(self._table[s, S // P]))
+
+    def _cow(self, s: int, c: int) -> None:
+        """Copy-on-write table column ``c`` of slot ``s``: take a private
+        page against the slot's reservation, duplicate the shared page's
+        contents on device, repoint the table, release the shared
+        reference.  The shared page itself is never mutated."""
+        old = int(self._table[s, c])
+        assert self._alloc.refcount.get(old, 0) > 1, \
+            "ServingEngine: CoW of an unshared page"
+        new = self._alloc.alloc_one()
+        self._slot_reserved[s] -= 1
+        self.caches = self._copy_block_fn(
+            self.caches, jnp.asarray(old, jnp.int32),
+            jnp.asarray(new, jnp.int32))
+        self._table[s, c] = new
+        freed = self._alloc.free([old])
+        assert not freed        # still referenced by the other holder(s)
+        self._slot_shared[s].discard(c)
+        self.stats["cow_copies"] += 1
 
     def _ensure_blocks(self, s: int, p_lo: int, p_hi: int) -> None:
-        """Allocate the table columns that writes at positions
-        [p_lo, p_hi] will touch (no-op for columns already mapped —
-        e.g. a wrapped SWA ring reuses its pages)."""
+        """Make the table columns that writes at positions [p_lo, p_hi]
+        will touch safely writable: allocate unmapped columns; columns
+        mapped to a SHARED page copy-on-write first (a divergent append
+        must never mutate a page another slot still reads); an owned page
+        still advertised in the content registry is deregistered before
+        the append changes its content."""
         if not self.paged:
             return
         P = self.page_size
         if self._has_attn:
-            cols = range(p_lo // P, p_hi // P + 1)
-        elif self._has_swa:
+            for c in range(p_lo // P, p_hi // P + 1):
+                b = int(self._table[s, c])
+                if b < 0:
+                    self._table[s, c] = self._alloc.alloc_one()
+                    self._slot_reserved[s] -= 1
+                elif self._can_share:
+                    if self._alloc.refcount.get(b, 0) > 1:
+                        self._cow(s, c)
+                    else:
+                        # sole holder: the append may proceed in place,
+                        # but the page's advertised content is about to
+                        # change — stop matching it
+                        self._alloc.deregister(b)
+                        self._slot_shared[s].discard(c)
+        if self._has_swa:
             ring_p = self._ring_blocks * P
             if p_hi - p_lo + 1 >= ring_p:
                 cols = range(self._ring_blocks)
@@ -482,29 +779,53 @@ class ServingEngine:
                 cols = (range(c0, c1 + 1) if c0 <= c1 else
                         list(range(c0, self._ring_blocks))
                         + list(range(c1 + 1)))
-        else:
-            return
-        for c in cols:
-            if self._table[s, c] < 0:
-                self._table[s, c] = self._alloc.alloc_one()
-                self._slot_reserved[s] -= 1
+            for c in cols:
+                if self._table_swa[s, c] < 0:
+                    self._table_swa[s, c] = self._alloc_swa.alloc_one()
+                    self._slot_reserved_swa[s] -= 1
 
     def _free_slot_blocks(self, s: int) -> None:
-        """Return a finished slot's pages to the pool, scrubbed (keys
-        zeroed, positions -1) so the next owner can't see stale entries,
-        and release any unused reservation."""
+        """Drop a finished slot's page references and release unused
+        reservations.  Only pages whose refcount reached ZERO return to
+        the free list and get scrubbed (keys zeroed, positions -1);
+        pages still shared by another slot stay live — scrubbing them
+        would corrupt the other slot's cache."""
         if not self.paged:
             return
         blocks = [int(b) for b in self._table[s] if b >= 0]
+        scrub: List[int] = []
         if blocks or self._slot_reserved[s]:
-            self._alloc.free(blocks, unreserve=self._slot_reserved[s])
+            scrub = self._alloc.free(blocks,
+                                     unreserve=self._slot_reserved[s])
             self._slot_reserved[s] = 0
-        if blocks:
+        scrub_swa: List[int] = []
+        if self._has_swa:
+            sblocks = [int(b) for b in self._table_swa[s] if b >= 0]
+            if sblocks or self._slot_reserved_swa[s]:
+                scrub_swa = self._alloc_swa.free(
+                    sblocks, unreserve=self._slot_reserved_swa[s])
+                self._slot_reserved_swa[s] = 0
+            self._table_swa[s] = -1
+        if scrub or scrub_swa:
             pad = np.full((self.n_cols,), self.num_blocks, np.int32)
-            pad[:len(blocks)] = blocks
+            pad[:len(scrub)] = scrub
+            wid = max(1, self._ring_blocks)
+            pad_swa = np.full((wid,), max(1, self.num_blocks_swa), np.int32)
+            pad_swa[:len(scrub_swa)] = scrub_swa
             self.caches = self._clear_blocks_fn(self.caches,
-                                                jnp.asarray(pad))
+                                                jnp.asarray(pad),
+                                                jnp.asarray(pad_swa))
         self._table[s] = -1
+        self._slot_shared[s].clear()
+
+    def _table_arg(self):
+        """The block-table step operand: one array for single-kind
+        engines, per-cache-kind {"attn", "swa"} tables when the pools
+        have split block-id spaces."""
+        if self.paged and self._has_swa:
+            return {"attn": jnp.asarray(self._table),
+                    "swa": jnp.asarray(self._table_swa)}
+        return jnp.asarray(self._table)
 
     # -- occupancy / fleet hooks (read by serve.router.FleetRouter) ------
 
@@ -523,6 +844,13 @@ class ServingEngine:
         tok += sum(r.max_new - len(r.generated)
                    for r in self.active if r is not None)
         return tok
+
+    @property
+    def pending_prefill_calls(self) -> int:
+        """Jitted chunked-prefill calls still ahead of this engine (its
+        own queue, shared-prefix discounts applied) — the per-call
+        dispatch overhead term of the router's admission-aware ECT."""
+        return sum(self.prefill_calls_for(r.prompt) for r in self.queue)
 
     @property
     def free_pages(self) -> int:
@@ -576,7 +904,10 @@ class ServingEngine:
         so each request is reset to re-prefill from its prompt:
         generated tokens are discarded, never silently kept or dropped.
         The engine itself is left empty (slots idle, pages freed,
-        sampling params back to greedy defaults)."""
+        sampling params back to greedy defaults).  Each request keeps its
+        prefix-page digest trail (``prefix_digests``) so the router's
+        failover requeue can still steer it toward a replica already
+        holding (or about to admit) the same shared prefix."""
         out: List[Request] = []
         admitted = sorted((s for s in range(self.slots)
                            if self.active[s] is not None),
@@ -596,6 +927,7 @@ class ServingEngine:
             req.generated = []
             req.pending = -1
             req.done = False
+            req.prefix_digests = self.prefix_digests(req.prompt)
         return out
 
     # -- request intake --------------------------------------------------
@@ -637,10 +969,13 @@ class ServingEngine:
         if free:
             self.caches = self._reset_fn(self.caches, free[-1])
         if self.paged:
-            # all-padding block vector: scrub is a compiled no-op
+            # all-padding block vectors: scrub is a compiled no-op
             pad = np.full((self.n_cols,), self.num_blocks, np.int32)
+            pad_swa = np.full((max(1, self._ring_blocks),),
+                              max(1, self.num_blocks_swa), np.int32)
             self.caches = self._clear_blocks_fn(self.caches,
-                                                jnp.asarray(pad))
+                                                jnp.asarray(pad),
+                                                jnp.asarray(pad_swa))
         jax.block_until_ready(self.caches)
 
     # -- the serving loop ------------------------------------------------
@@ -657,7 +992,7 @@ class ServingEngine:
         self._step_seq += 1
         nxt, self.caches, self._seen = self._step_fn(
             self.params, self.caches, self._seen, jnp.asarray(toks),
-            jnp.asarray(pos), jnp.asarray(self._table), jnp.asarray(keys),
+            jnp.asarray(pos), self._table_arg(), jnp.asarray(keys),
             jnp.asarray(self._temp), jnp.asarray(self._topp),
             jnp.asarray(self._topk), jnp.asarray(self._reppen))
         return nxt, self.caches
@@ -668,16 +1003,43 @@ class ServingEngine:
         stays FIFO), reset the slot's per-slot state, then walk the
         prompt through the cache ``chunk`` tokens per jitted step (other
         slots masked with position -1).  The final chunk may be shorter —
-        it compiles once per distinct remainder length."""
+        it compiles once per distinct remainder length.
+
+        **Prefix-sharing fast path** (content-addressed pools): prompt
+        pages already resident — registered by an earlier admission whose
+        prompt shares this one's prefix — are ATTACHED (table points at
+        the existing page, refcount++) instead of reserved and
+        re-prefilled; only the unshared tail runs through the jitted
+        steps.  At least the LAST prompt token always recomputes (its
+        logits seed decoding), so a fully resident prompt still costs one
+        short chunk — and copy-on-writes the page it lands in.  The
+        skipped pages are also excluded from the up-front reservation,
+        which is what raises peak concurrency at equal pool memory."""
         for s in range(self.slots):
             if self.active[s] is None and self.queue:
                 req = self.queue[0]
+                S = len(req.prompt)
+                shared_tok, hits, partial = (
+                    self._match_prefix(req.prompt) if self._can_share
+                    else (0, [], None))
+                start = min(shared_tok, S - 1)
                 if self.paged:
-                    need = self._blocks_for(len(req.prompt) + req.max_new)
+                    # reserve only unshared pages — but a shared page the
+                    # tail will write into (the partial hit, or the last
+                    # full hit when the whole prompt matched) still needs
+                    # a private page for its copy-on-write
+                    untouched = sum(1 for (i, _) in hits
+                                    if (i + 1) * self.page_size <= start)
+                    need = self._blocks_for(S + req.max_new) - untouched
                     if not self._alloc.reserve(need):
                         self.stats["backpressure"] += 1
                         break          # FIFO: later requests wait too
                     self._slot_reserved[s] = need
+                    need_swa = self._blocks_for_swa(S + req.max_new)
+                    if need_swa:
+                        ok = self._alloc_swa.reserve(need_swa)
+                        assert ok   # exact-fit pool: slots * ring_blocks
+                        self._slot_reserved_swa[s] = need_swa
                 self.queue.pop(0)
                 self.active[s] = req
                 self._admit_seq += 1
@@ -688,10 +1050,21 @@ class ServingEngine:
                 self._topp[s] = req.top_p
                 self._topk[s] = req.top_k
                 self._reppen[s] = req.rep_penalty
+                for (c, b) in hits:
+                    self._table[s, c] = b
+                    self._alloc.share(b)
+                    self._slot_shared[s].add(c)
+                if partial is not None:
+                    c, b, _ = partial
+                    self._table[s, c] = b
+                    self._alloc.share(b)
+                    self._slot_shared[s].add(c)
+                self.stats["shared_pages"] += \
+                    len(hits) + (1 if partial else 0)
+                self.stats["shared_tokens"] += start
                 prompt = np.asarray(req.prompt, np.int32)
-                S = len(req.prompt)
                 nxt = None
-                for c0 in range(0, S, self.chunk):
+                for c0 in range(start, S, self.chunk):
                     piece = prompt[c0:c0 + self.chunk]
                     C = len(piece)
                     self._ensure_blocks(s, c0, c0 + C - 1)
@@ -701,6 +1074,8 @@ class ServingEngine:
                     pos[s] = np.arange(c0, c0 + C, dtype=np.int32)
                     nxt, self.caches = self._call_step(toks, pos)
                     self.stats["prefill_calls"] += 1
+                if self._can_share:
+                    self._register_prefix(s, req.prompt)
                 self.positions[s] = S
                 req.pending = int(nxt[s, -1])
                 self.stats["admitted"] += 1

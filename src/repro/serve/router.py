@@ -9,16 +9,27 @@ bound to a simulated ``CompNode`` device (``perfmodel.DEVICE_CATALOG``),
 pulls from ONE shared FIFO request queue, and places each request on the
 replica minimizing the Eq. 2-style estimated completion time
 
-    ECT(r, p) = (pending_tokens(p) + prompt + max_new) * flops_per_token(p)
-                / CompNode.speed(p)
+    ECT(r, p) = (pending_tokens(p) + prompt + max_new
+                 + prefill_call_cost * (pending_prefill_calls(p)
+                                        + prefill_calls_for(r)
+                                        + queued(p)))
+                * flops_per_token(p) / CompNode.speed(p)
 
-subject to the replica's free paged blocks (a request is only dispatched
-to a replica whose pool can cover its worst-case reservation on top of
-everything already queued there; otherwise it waits at the head of the
-shared queue — FIFO is never reordered).  A head request that no LIVE
-replica could ever run (heterogeneous fleets: vocab/context/pool gating)
-drafts the fastest capable standby from the backup pool immediately
-instead of waiting for a failure that may never come.
+admission-aware: every jitted chunked-prefill call still ahead of the
+replica (its queue's, prefix-sharing discounts applied, plus this
+request's own tail) costs ``prefill_call_cost`` token-equivalents of
+dispatch overhead, and each queued request one admission's worth of
+service latency.  Replicas within ``tie_eps`` of the best ECT are a
+near-tie, broken toward PREFIX AFFINITY — the replica already holding
+(or about to admit) the request's shared prompt-prefix pages — then by
+lowest replica id (fully deterministic).  Placement is subject to the
+replica's free paged blocks (a request is only dispatched to a replica
+whose pool can cover its worst-case reservation on top of everything
+already queued there; otherwise it waits at the head of the shared
+queue — FIFO is never reordered).  A head request that no LIVE replica
+could ever run (heterogeneous fleets: vocab/context/pool gating) drafts
+the fastest capable standby from the backup pool immediately instead of
+waiting for a failure that may never come.
 
 Fault tolerance reuses the broker verbatim: every replica's node is
 registered ``active``, every standby replica's node ``backup``.  A
@@ -28,7 +39,10 @@ activates the corresponding standby engine, and the dead replica's
 in-flight requests (admitted slots AND its internal queue) are re-queued
 at the FRONT of the shared queue from their prompts — the KV/pages died
 with the replica, so they re-prefill from scratch; nothing is ever
-silently dropped.  Requests on unaffected replicas are untouched (slot
+silently dropped.  Drained requests keep their prefix digests
+(``drain_requests`` stamps them), so same-prefix victims still
+co-locate by affinity and re-share their prefix pages on the
+survivor.  Requests on unaffected replicas are untouched (slot
 isolation keeps their greedy decode bitwise-identical to a no-failure
 run).
 
@@ -104,9 +118,17 @@ class FleetRouter:
 
     def __init__(self, replicas: Sequence[Tuple[ServingEngine, DeviceLike]],
                  standby: Sequence[Tuple[ServingEngine, DeviceLike]] = (),
-                 *, seed: int = 0, heartbeat_s: float = 10.0):
+                 *, seed: int = 0, heartbeat_s: float = 10.0,
+                 prefill_call_cost: float = 4.0, tie_eps: float = 0.02):
         if not replicas:
             raise ValueError("FleetRouter: at least one replica required")
+        # admission-aware ECT: each outstanding jitted prefill call costs
+        # this many token-equivalents of dispatch overhead on top of its
+        # tokens, and each queued request one admission's worth of
+        # service latency.  tie_eps is the relative ECT band treated as a
+        # near-tie, broken toward prefix affinity then replica id.
+        self.prefill_call_cost = prefill_call_cost
+        self.tie_eps = tie_eps
         self.broker = Broker(seed=seed, heartbeat_s=heartbeat_s)
         self.replicas: List[Replica] = []
         self._standby: Dict[int, Replica] = {}      # node_id -> Replica
@@ -159,11 +181,45 @@ class FleetRouter:
         self.queue.append(req)
 
     def _ect(self, rep: Replica, req: Request) -> float:
-        """Eq. 2-style estimated completion time of ``req`` on ``rep``:
-        the replica's outstanding work plus this request, costed at the
-        replica's model size, over the simulated device speed."""
-        tokens = rep.engine.pending_tokens + len(req.prompt) + req.max_new
+        """Eq. 2-style estimated completion time of ``req`` on ``rep``,
+        admission-aware: beyond the token count (outstanding work plus
+        this request), every jitted chunked-prefill call still ahead —
+        the replica's queue, prefix-sharing discounts applied, plus this
+        request's own ``ceil(tail/chunk)`` — costs
+        ``prefill_call_cost`` token-equivalents of dispatch overhead,
+        and each already-queued request one more admission's worth of
+        service latency.  Two replicas with equal token backlogs no
+        longer tie when one of them has the backlog fragmented across
+        many short prompts (more calls, slower wall clock)."""
+        eng = rep.engine
+        tokens = eng.pending_tokens + len(req.prompt) + req.max_new
+        calls = eng.pending_prefill_calls + eng.prefill_calls_for(req.prompt)
+        tokens += self.prefill_call_cost * (calls + len(eng.queue))
         return tokens * rep.flops_per_token / rep.node.speed
+
+    def _affinity(self, rep: Replica, req: Request) -> int:
+        """Prefix-affinity score of placing ``req`` on ``rep``: resident
+        shared prefix pages the engine could attach RIGHT NOW, or — when
+        the pages died with a failed replica — the longest common
+        prefix-digest run with a request already queued on ``rep`` (the
+        pages will be registered when that request admits, so
+        co-locating still converts to sharing).  Digest trails come from
+        ``drain_requests`` for failover requeues and are recomputed from
+        the prompt otherwise."""
+        eng = rep.engine
+        pages = eng.shared_prefix_pages(req.prompt)
+        mine = (req.prefix_digests if req.prefix_digests is not None
+                else eng.prefix_digests(req.prompt))
+        for other in eng.queue:
+            theirs = (other.prefix_digests if other.prefix_digests is not None
+                      else eng.prefix_digests(other.prompt))
+            common = 0
+            for a, b in zip(mine, theirs):
+                if a != b:
+                    break
+                common += 1
+            pages = max(pages, common)
+        return pages
 
     def _draft_capable_standby(self, req: Request) -> Optional[Replica]:
         """No LIVE replica can ever serve ``req``: activate the fastest
@@ -207,7 +263,18 @@ class FleetRouter:
             if not ready:
                 self.stats["held"] += 1
                 return
-            best = min(ready, key=lambda r: (self._ect(r, req), r.replica_id))
+            # near-tie break toward prefix affinity: replicas within
+            # tie_eps of the best ECT are effectively interchangeable on
+            # load, so prefer the one already holding (or about to admit)
+            # the request's shared prefix pages; exact ties fall back to
+            # the lowest replica id — fully deterministic
+            ects = {r.replica_id: self._ect(r, req) for r in ready}
+            floor = min(ects.values())
+            band = [r for r in ready
+                    if ects[r.replica_id] <= floor * (1.0 + self.tie_eps)]
+            best = min(band, key=lambda r: (-self._affinity(r, req),
+                                            ects[r.replica_id],
+                                            r.replica_id))
             self.queue.pop(0)
             best.engine.submit(req)
             self.placements.setdefault(req.req_id, []).append(best.replica_id)

@@ -295,9 +295,10 @@ def test_simultaneous_deaths_requeue_in_submission_order(tiny):
         router.tick()
     dead = router.heartbeat_round()
     assert len(dead) == 2
-    # ECT placement: rtx4090 holds reqs 0/3/5, the victims hold 1/4 and
-    # 2 — without the post-drain sort the prepends would leave [2, 1, 4]
-    assert router.stats["requeued"] == 3
+    # admission-aware ECT placement: rtx4090 holds reqs 0/3, the victims
+    # hold 1/4 and 2/5 — without the post-drain sort the per-replica
+    # prepends would leave [2, 5, 1, 4]
+    assert router.stats["requeued"] == 4
     ids = [r.req_id for r in router.queue]
     assert len(ids) >= 2 and ids == sorted(ids), ids   # global FIFO
     done = router.run()

@@ -14,7 +14,7 @@ import pytest
 from repro.configs import get_smoke_config
 from repro.models.transformer import init_cache, init_params
 from repro.serve.engine import (BlockAllocator, Request, ServingEngine,
-                                _clear_blocks, generate)
+                                generate, make_clear_blocks)
 
 
 def _tiny_cfg():
@@ -185,7 +185,8 @@ def test_block_recycle_is_scrubbed():
         return jnp.zeros_like(leaf) + (3 if name == "pos" else 1)
     caches = jax.tree_util.tree_map_with_path(fill, caches)
     blocks = jnp.asarray([1, 4, 6, 6], jnp.int32)   # 6 = out-of-pool pad
-    cleared = _clear_blocks(caches, blocks)
+    cleared = make_clear_blocks(cfg)(caches, blocks,
+                                     jnp.asarray([0], jnp.int32))
 
     def check(path, before, after):
         name = str(getattr(path[-1], "key", path[-1]))
