@@ -8,9 +8,10 @@ vs paged vs paged-kernel, admission latency, peak concurrency at equal
 cache memory, per-tick HBM bytes kernel vs gather, the broker-routed
 ``fleet`` section: placement skew across heterogeneous simulated devices
 + fleet-vs-single-engine throughput, and the ``prefix`` section:
-prefix-sharing admission-call/concurrency wins at equal pool memory) —
-CI uploads it as an artifact so the trajectory accumulates across
-PRs."""
+prefix-sharing admission-call/concurrency wins at equal pool memory);
+``chaos_bench`` (its own CI step, ``--only chaos``) merges the ``chaos``
+degraded-mode fault-tolerance section into the same file — CI uploads
+it as an artifact so the trajectory accumulates across PRs."""
 from __future__ import annotations
 
 import json
@@ -496,6 +497,194 @@ def prefix_share_bench(summary: Optional[dict] = None) -> List[dict]:
              "us_per_call": "",
              "derived": f"requeued{len(victims)}_reshared"
                         f"{survivor.engine.stats['shared_pages']}pages"}]
+
+
+def chaos_bench(summary: Optional[dict] = None) -> List[dict]:
+    """Degraded-mode fault tolerance under a mixed fault schedule (the
+    ISSUE 8 acceptance bench): crash + straggle + partition +
+    pool_pressure over a 3-replica fleet, plus a poisoned request whose
+    replica is killed until its retry budget runs out.
+
+    Asserted: (a) zero dropped/duplicated requests — every submitted
+    req_id terminates exactly once across completed + failed; (b) every
+    survivor's greedy output is bitwise-identical to a no-fault
+    reference run; (c) requests in flight on the partitioned replica
+    resume after heal with no re-dispatch and no re-prefill; (d) the
+    poisoned request exhausts its retry budget with outcome
+    ``failed_retries`` while the rest of the workload completes.
+    The fault schedule is built mid-run against replicas that are
+    actually alive and loaded, so the bench stays deterministic without
+    hard-coding placement.  Standalone runs merge the ``chaos`` section
+    into ``BENCH_engine.json`` (CI runs ``--only chaos``)."""
+    import dataclasses
+
+    from repro.configs import get_smoke_config
+    from repro.models.transformer import init_params
+    from repro.serve.engine import Request, ServingEngine
+    from repro.serve.faults import Fault, FaultPlan
+    from repro.serve.router import FleetRouter
+
+    standalone = summary is None
+    if standalone:
+        summary = {}
+        if os.path.exists(BENCH_JSON):
+            with open(BENCH_JSON) as f:
+                summary = json.load(f)
+    cfg = dataclasses.replace(get_smoke_config("gpt3-24l"), vocab_size=128,
+                              d_model=128, d_ff=256, n_heads=4, n_kv_heads=4,
+                              head_dim=32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    n_req = 10
+
+    def eng():
+        return ServingEngine(params, cfg, slots=2, cache_len=64, chunk=8,
+                             paged=True, page_size=16)
+
+    def reqs():
+        # poison first so its replica kills land while the regular
+        # workload is still in flight; staggered max_new so completions
+        # don't all line up on one tick
+        rs = [Request(n_req, [(7 * j + 1) % cfg.vocab_size
+                              for j in range(6)],
+                      max_new=40, max_retries=1)]        # the poison pill
+        rs += [Request(i, [(3 + 5 * i + j) % cfg.vocab_size
+                           for j in range(4 + i % 3)],
+                       max_new=8 + 3 * (i % 5))
+               for i in range(n_req)]
+        return rs
+
+    def fleet(plan=None):
+        return FleetRouter(
+            [(eng(), d) for d in ("rtx4090", "rtx3080", "rtx3080")],
+            standby=[(eng(), "rtx3080"), (eng(), "rtx3080")],
+            fault_plan=plan)
+
+    # --- no-fault reference -------------------------------------------
+    ref_router = fleet()
+    for r in reqs():
+        ref_router.submit(r)
+    t0 = time.perf_counter()
+    ref = ref_router.run()
+    calm_s = time.perf_counter() - t0
+    assert ref.ok and len(ref.completed) == n_req + 1
+    ref_out = {r.req_id: list(r.generated) for r in ref.completed}
+    calm_ticks = ref.ticks
+
+    # --- chaos run ----------------------------------------------------
+    plan = FaultPlan()
+    router = fleet(plan)
+    work = reqs()
+    poison = work[0]
+    for r in work:
+        router.submit(r)
+    kills = 0
+    part_rep = None
+    frozen = None
+    frozen_pl = None
+    t0 = time.perf_counter()
+    while router.outstanding() and router.tick_count < 600:
+        router.tick()
+        if kills < 2 and poison.outcome is None:
+            # phase 1: kill whichever replica hosts the poison, twice —
+            # past max_retries=1 the second requeue fails it
+            host = next((rep for rep in router.replicas if rep.alive
+                         and any(a is poison for a in rep.engine.active)),
+                        None)
+            if host is not None:
+                router.fail_replica(host.replica_id)
+                kills += 1
+        elif poison.outcome is not None and part_rep is None:
+            # phase 2: partition the busiest live replica, straggle and
+            # pressure the next-busiest, crash it once it recovers.
+            # Wait until requeued work is actually back in flight so the
+            # partition freezes something.
+            live = [rep for rep in router.replicas if rep.alive]
+            cand = max(live, key=lambda rep: rep.engine.n_active)
+            if cand.engine.n_active == 0:
+                continue
+            part_rep = cand
+            straggler = max((rep for rep in live if rep is not part_rep),
+                            key=lambda rep: rep.engine.n_active)
+            t = router.tick_count           # the tick about to run
+            plan.add(Fault(tick=t, replica_id=part_rep.replica_id,
+                           kind="partition", duration=5))
+            plan.add(Fault(tick=t, replica_id=straggler.replica_id,
+                           kind="straggle", factor=6.0, duration=8))
+            plan.add(Fault(tick=t + 1, replica_id=straggler.replica_id,
+                           kind="pool_pressure", pages=8, duration=6))
+            plan.add(Fault(tick=t + 9, replica_id=straggler.replica_id,
+                           kind="crash"))
+        elif part_rep is not None and frozen is None:
+            # partition just landed: snapshot what it froze in place
+            frozen = {a.req_id for a in part_rep.engine.active
+                      if a is not None}
+            frozen_pl = {rid: list(router.placements[rid])
+                         for rid in frozen}
+    res = router.run(max_ticks=600)
+    chaos_s = time.perf_counter() - t0
+    chaos_ticks = router.tick_count
+    st = router.stats
+
+    ids = sorted([r.req_id for r in res.completed]
+                 + [r.req_id for r in res.failed])
+    assert ids == list(range(n_req + 1)), \
+        f"requests dropped or duplicated: {ids}"
+    assert res.failed == [poison] and poison.outcome == "failed_retries", \
+        f"poison outcome {poison.outcome!r}, failed={res.failed}"
+    assert kills == 2 and poison.retries == 2
+    for r in res.completed:
+        assert list(r.generated) == ref_out[r.req_id], \
+            f"chaos changed greedy output of req {r.req_id}"
+    assert frozen, "partition target held no in-flight work"
+    for rid in frozen:
+        # frozen requests finish where they froze: no new placement
+        # after the partition, terminal outcome ok
+        assert router.placements[rid] == frozen_pl[rid]
+        assert res.traces[rid]["outcome"] == "ok"
+    # every admission on the partitioned engine is accounted for by
+    # exactly one router placement -> heal never re-prefilled
+    assert part_rep.engine.stats["admitted"] == sum(
+        pl.count(part_rep.replica_id)
+        for pl in router.placements.values())
+    assert st["partitions"] == 1 and st["partition_heals"] == 1
+    assert st["straggles"] >= 1 and st["soft_drains"] >= 1
+    assert st["pool_pressure"] >= 1 and st["injected_crashes"] >= 1
+    assert st["failures"] >= 3          # 2 poison kills + injected crash
+
+    toks_calm = sum(len(r.generated) for r in ref.completed)
+    toks_chaos = sum(len(r.generated) for r in res.completed)
+    goodput_calm = toks_calm / max(1, calm_ticks)
+    goodput_chaos = toks_chaos / max(1, chaos_ticks)
+    summary["chaos"] = {
+        "requests": n_req + 1, "poison_req": n_req,
+        "fault_kinds": ["crash", "straggle", "partition", "pool_pressure"],
+        "outcomes": res.outcomes(),
+        "ticks": {"calm": calm_ticks, "chaos": chaos_ticks},
+        "goodput_tok_per_tick": {"calm": goodput_calm,
+                                 "chaos": goodput_chaos},
+        "retries_total": sum(tr["retries"] for tr in res.traces.values()),
+        "requeued": st["requeued"],
+        "soft_drains": st["soft_drains"],
+        "preempted": st["preempted"],
+        "partition_heals": st["partition_heals"],
+        "injected_crashes": st["injected_crashes"],
+        "manual_kills": kills,
+        "poison_retries": poison.retries,
+        "bitwise_equal_survivors": True,
+        "partition_resume_without_reprefill": True,
+        "wall_s": {"calm": calm_s, "chaos": chaos_s},
+    }
+    if standalone:
+        with open(BENCH_JSON, "w") as f:
+            json.dump(summary, f, indent=1, default=float)
+    return [{"name": "chaos/mixed_fault_schedule",
+             "us_per_call": chaos_s / max(1, chaos_ticks) * 1e6,
+             "derived": f"ok{len(res.completed)}_failed{len(res.failed)}_"
+                        f"heals{st['partition_heals']}_"
+                        f"drains{st['soft_drains']}"},
+            {"name": "chaos/goodput_vs_calm",
+             "us_per_call": calm_s / max(1, calm_ticks) * 1e6,
+             "derived": f"{goodput_chaos / goodput_calm:.2f}x_tok_per_tick"}]
 
 
 def scheduler_bench() -> List[dict]:

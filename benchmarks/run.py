@@ -39,6 +39,7 @@ def main() -> None:
         # runs them, so a no-filter run must not repeat the workloads
         ("fleet:only", micro.fleet_bench),
         ("prefix:only", micro.prefix_share_bench),
+        ("chaos", micro.chaos_bench),     # degraded-mode fault tolerance
         ("scheduler", micro.scheduler_bench),
         ("compression", micro.compression_bench),
         ("pipeline", micro.pipeline_bench),

@@ -23,6 +23,12 @@ that page once and attaches it (refcount++) on every later admission —
 including failover requeues, whose drained requests carry their prefix
 digests so the router co-locates them with their shared pages.
 
+A final degraded-mode act injects a ``FaultPlan`` on a healthy fleet:
+the fast replica straggles (soft-drain moves its work), one rtx3080 is
+network-partitioned (its requests freeze and resume after heal with no
+re-prefill), and the run still completes every request "ok",
+bitwise-equal to the calm run.
+
     PYTHONPATH=src python examples/serve_fleet.py
 """
 import argparse
@@ -35,9 +41,10 @@ from repro.serve.engine import Request, ServingEngine
 from repro.serve.router import FleetRouter, sim_node
 
 
-def build_fleet(params, cfg, *, kill_rtx3080: bool):
+def build_fleet(params, cfg, *, kill_rtx3080: bool, plan=None):
     """3 active replicas + 1 standby.  ``kill_rtx3080`` sets replica 1's
-    node reliability to 0 so the FIRST heartbeat round kills it."""
+    node reliability to 0 so the FIRST heartbeat round kills it; ``plan``
+    optionally injects a degraded-mode fault schedule."""
     def engine():
         return ServingEngine(params, cfg, slots=2, cache_len=64, chunk=8,
                              paged=True, page_size=16)
@@ -46,7 +53,7 @@ def build_fleet(params, cfg, *, kill_rtx3080: bool):
              sim_node("rtx3080", reliability=1.0)]
     return FleetRouter([(engine(), n) for n in nodes],
                        [(engine(), sim_node("rtx3080", reliability=1.0))],
-                       seed=0)
+                       seed=0, fault_plan=plan)
 
 
 SYSTEM = list(range(40, 56))        # one full shared system-prompt page
@@ -116,6 +123,35 @@ def main():
         assert shared > 0, "system-prompt page never shared"
         print(f"prefix sharing: {shared} page attaches fleet-wide "
               f"({cow} copy-on-write), outputs unchanged ✓")
+
+    # act 3 — degraded mode without any death: a FaultPlan straggles the
+    # fast replica (its tick-latency EWMA crosses the drain threshold ->
+    # in-flight work soft-drains, digests preserved) and partitions one
+    # rtx3080 (its requests FREEZE in place and resume after heal with
+    # no re-dispatch and no re-prefill); every request still completes
+    # "ok", bitwise-equal to the calm run
+    from repro.serve.faults import Fault, FaultPlan
+    plan = FaultPlan()
+    plan.add(Fault(tick=2, replica_id=0, kind="straggle", factor=6.0,
+                   duration=6))
+    plan.add(Fault(tick=3, replica_id=2, kind="partition", duration=4))
+    degraded = build_fleet(params, cfg, kill_rtx3080=False, plan=plan)
+    for i in range(args.requests):
+        tail = [(3 + 5 * i + j) % cfg.vocab_size for j in range(4 + i % 3)]
+        degraded.submit(Request(i, SYSTEM + tail, max_new=8))
+    res = degraded.run()
+    st = degraded.stats
+    print(f"degraded run: outcomes " + ", ".join(
+        f"{k}={v}" for k, v in sorted(res.outcomes().items())))
+    print(f"  {st['straggles']} straggle ticks -> {st['soft_drains']} "
+          f"soft-drain ({st['requeued']} requests moved), "
+          f"{st['partitions']} partition -> {st['partition_heals']} "
+          f"healed in place")
+    assert res.ok, res.outcomes()
+    assert st["soft_drains"] >= 1, "straggler never crossed drain EWMA"
+    assert st["partitions"] == 1 and st["partition_heals"] == 1
+    assert {r.req_id: r.generated for r in res.completed} == ref
+    print("straggler drained, partition healed, outputs bitwise-equal ✓")
 
 
 if __name__ == "__main__":

@@ -46,6 +46,12 @@ class Broker:
         self.backup_fraction = backup_fraction
         self.heartbeat_s = heartbeat_s
         self.rng = np.random.RandomState(seed)
+        # separate seeded stream for backup-pool pings: active-failure
+        # outcomes for a given seed stay independent of how many
+        # standbys are registered (and identical to a broker that never
+        # pinged backups at all)
+        self._backup_rng = np.random.RandomState((seed ^ 0x9E3779B9)
+                                                 & 0xFFFFFFFF)
         self.events: List[Event] = []
         self.tasks: Dict[int, Task] = {}
         self.schedule: Optional[Schedule] = None
@@ -196,12 +202,20 @@ class Broker:
         return None
 
     def heartbeat_round(self) -> List[int]:
-        """Ping-pong every active node; nodes fail with (1 - reliability)
-        per round.  Returns the list of nodes detected offline."""
+        """Ping-pong every registered node — actives AND backups — each
+        failing with (1 - reliability) per round.  Standbys are not
+        immortal: a dead backup is dropped from the pool so it can never
+        be drafted as a replacement.  Backups draw from their own seeded
+        stream, so active-failure outcomes for a given seed are stable
+        regardless of backup-pool size.  Returns the list of nodes
+        detected offline (actives first)."""
         self._t += self.heartbeat_s
         dead = []
         for nid, node in list(self.active.items()):
             if self.rng.random_sample() > node.reliability:
+                dead.append(nid)
+        for nid, node in list(self.backup.items()):
+            if self._backup_rng.random_sample() > node.reliability:
                 dead.append(nid)
         for nid in dead:
             self.quit(nid, graceful=False)

@@ -31,6 +31,11 @@ requests), with ``--standby`` spare replicas registered in the broker's
 backup pool and ``--heartbeat-every`` ticks between failure-detection
 rounds (``--reliability`` < 1 makes seeded mid-decode failures happen:
 in-flight requests re-prefill on the drafted replacement).
+``--chaos-rate`` > 0 additionally injects a seeded ``FaultPlan`` (crash,
+straggle, partition, pool_pressure) over the first ``--chaos-ticks``
+ticks; requests carry a ``--max-retries`` budget and the run reports
+structured per-request outcomes instead of raising away partial results
+(``--strict`` restores the raise).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b \
         --requests 8 --max-new 16 --slots 4 --chunk 16 --page-size 16
@@ -110,6 +115,24 @@ def main():
     ap.add_argument("--reliability", type=float, default=1.0,
                     help="per-heartbeat replica survival probability "
                          "(< 1 exercises seeded mid-decode failover)")
+    ap.add_argument("--chaos-rate", type=float, default=0.0,
+                    help="fleet mode: per-(tick, replica) probability of "
+                         "a seeded injected fault (crash / straggle / "
+                         "partition / pool_pressure); 0 = no fault plan")
+    ap.add_argument("--chaos-ticks", type=int, default=64,
+                    help="inject faults over the first N ticks of the "
+                         "chaos plan (with --chaos-rate > 0)")
+    ap.add_argument("--chaos-seed", type=int, default=-1,
+                    help="fault-plan RNG seed (-1 = reuse --seed)")
+    ap.add_argument("--max-retries", type=int, default=3,
+                    help="per-request retry budget: a request requeued "
+                         "by failures more than this many times ends "
+                         "with outcome failed_retries instead of "
+                         "retrying forever")
+    ap.add_argument("--strict", action="store_true",
+                    help="fleet mode: raise on any failed request "
+                         "instead of returning partial results with "
+                         "structured outcomes")
     ap.add_argument("--no-warmup", action="store_true",
                     help="skip ahead-of-traffic compilation of the two "
                          "engine shapes")
@@ -189,11 +212,21 @@ def serve_fleet(args, cfg, build_engine):
     def node(i):
         return sim_node(devices[i % len(devices)],
                         reliability=args.reliability)
+    plan = None
+    if args.chaos_rate > 0:
+        from repro.serve.faults import FaultPlan
+        chaos_seed = args.seed if args.chaos_seed < 0 else args.chaos_seed
+        plan = FaultPlan.seeded(
+            chaos_seed, ticks=args.chaos_ticks,
+            replica_ids=list(range(args.replicas + args.standby)),
+            rate=args.chaos_rate)
+        print(f"chaos: {len(plan)} seeded faults over {args.chaos_ticks} "
+              f"ticks (seed={chaos_seed}, rate={args.chaos_rate})")
     router = FleetRouter(
         [(build_engine(), node(i)) for i in range(args.replicas)],
         [(build_engine(), node(args.replicas + i))
          for i in range(args.standby)],
-        seed=args.seed)
+        seed=args.seed, fault_plan=plan)
     if not args.no_warmup:
         t0 = time.time()
         for rep in router.replicas:
@@ -210,18 +243,36 @@ def serve_fleet(args, cfg, build_engine):
         router.submit(Request(i, prompt, max_new=args.max_new,
                               temperature=args.temperature,
                               top_p=args.top_p, top_k=args.top_k,
-                              rep_penalty=args.rep_penalty))
+                              rep_penalty=args.rep_penalty,
+                              max_retries=args.max_retries))
     t0 = time.time()
-    done = router.run(heartbeat_every=args.heartbeat_every)
+    res = router.run(heartbeat_every=args.heartbeat_every,
+                     strict=args.strict)
     dt = time.time() - t0
+    done = res.completed
     toks = sum(len(r.generated) for r in done)
     st = router.stats
     print(f"{cfg.name} fleet: {len(router.live_replicas())} live replicas "
-          f"served {len(done)} requests, {toks} tokens in {dt:.2f}s "
-          f"({toks / dt:.1f} tok/s)")
+          f"served {len(done)}/{len(done) + len(res.failed)} requests, "
+          f"{toks} tokens in {dt:.2f}s ({toks / dt:.1f} tok/s, "
+          f"{res.ticks} ticks)")
+    print(f"  outcomes: " + ", ".join(
+        f"{k}={v}" for k, v in sorted(res.outcomes().items())))
     print(f"  router: {st['placed']} placements, {st['held']} held ticks, "
           f"{st['failures']} failures, {st['requeued']} requeued, "
           f"{st['replacements']} drafted from backup")
+    degraded = {k: st[k] for k in ("soft_drains", "preempted", "straggles",
+                                   "partitions", "partition_heals",
+                                   "partition_escalations", "pool_pressure",
+                                   "injected_crashes") if st.get(k)}
+    if degraded:
+        print("  degraded mode: " + ", ".join(
+            f"{k}={v}" for k, v in sorted(degraded.items())))
+    for r in sorted(res.failed, key=lambda r: r.req_id)[:6]:
+        tr = res.traces.get(r.req_id, {})
+        print(f"  FAILED req{r.req_id}: outcome={r.outcome} "
+              f"retries={r.retries}/{r.max_retries} "
+              f"placements={tr.get('placements')}")
     shared = sum(r.engine.stats.get("shared_pages", 0)
                  for r in router.replicas)
     cow = sum(r.engine.stats.get("cow_copies", 0) for r in router.replicas)

@@ -228,6 +228,16 @@ class Request:
     # drain_requests() so a failover requeue keeps its prefix identity
     # for the router's affinity tie-break (None until drained)
     prefix_digests: Optional[List[int]] = None
+    # degraded-mode lifecycle (managed by serve.router.FleetRouter):
+    # retries counts requeue-from-prompt events caused by faults (crash,
+    # soft-drain, partition timeout — preemption is free); past
+    # max_retries the request stops consuming the fleet and fails
+    # terminally.  outcome is stamped exactly once when the request
+    # leaves the system: "ok" | "failed_retries" | "failed_unservable"
+    # | "deadline_exceeded" (None while still in flight).
+    retries: int = 0
+    max_retries: int = 3
+    outcome: Optional[str] = None
 
 
 class BlockAllocator:
@@ -264,6 +274,11 @@ class BlockAllocator:
         self.num_blocks = num_blocks
         self._free = list(range(num_blocks - 1, -1, -1))
         self.reserved = 0
+        # pages withheld from NEW reservations by fault injection
+        # (pool_pressure): existing reservations are untouched, so
+        # decode-time extends stay infallible — pressure only
+        # backpressures admission.  May transiently exceed n_free.
+        self.withheld = 0
         self.refcount: Dict[int, int] = {}
         self._by_digest: Dict[int, int] = {}       # digest -> block
         self._entries: Dict[int, tuple] = {}       # block -> (digest, check)
@@ -273,7 +288,7 @@ class BlockAllocator:
         return len(self._free)
 
     def can_reserve(self, n: int) -> bool:
-        return self.n_free - self.reserved >= n
+        return self.n_free - self.reserved - self.withheld >= n
 
     def reserve(self, n: int) -> bool:
         """Set aside ``n`` future pages; False = backpressure."""
@@ -594,7 +609,7 @@ class ServingEngine:
         self._slot_shared: List[set] = [set() for _ in range(slots)]
         self.stats = {"prefill_calls": 0, "decode_calls": 0, "admitted": 0,
                       "backpressure": 0, "shared_pages": 0,
-                      "shared_tokens": 0, "cow_copies": 0}
+                      "shared_tokens": 0, "cow_copies": 0, "preempted": 0}
         self._seed = seed
         self._step_seq = 0
         self._admit_seq = 0
@@ -863,7 +878,8 @@ class ServingEngine:
             return 1 << 30
         queued = sum(self._blocks_for(len(r.prompt) + r.max_new)
                      for r in self.queue)
-        return self._alloc.n_free - self._alloc.reserved - queued
+        return (self._alloc.n_free - self._alloc.reserved
+                - self._alloc.withheld - queued)
 
     @property
     def occupancy(self) -> dict:
@@ -929,6 +945,52 @@ class ServingEngine:
             req.done = False
             req.prefix_digests = self.prefix_digests(req.prompt)
         return out
+
+    def preempt_newest(self) -> Optional[Request]:
+        """Evict the YOUNGEST live request — the engine queue's tail if
+        any (it holds no pages yet), else the most recently admitted
+        slot — resetting it to re-prefill from its prompt exactly like
+        ``drain_requests`` (generated tokens discarded, pages freed and
+        scrubbed, prefix digests stamped so the victim re-shares its
+        prefix wherever it lands).  Returns the victim, or None when the
+        engine is idle.  The router uses this to satisfy a held
+        head-of-line request's worst-case reservation: preempting newest
+        keeps the loss (tokens already decoded) minimal and FIFO fairness
+        intact — the head is by construction older than anything
+        admitted after it."""
+        if self.queue:
+            req = self.queue.pop()
+        else:
+            live = [s for s in range(self.slots) if self.active[s] is not None]
+            if not live:
+                return None
+            s = max(live, key=lambda s: self._admitted_at[s])
+            req = self.active[s]
+            self.active[s] = None
+            self._free_slot_blocks(s)
+            self._temp[s] = 0.0
+            self._topp[s] = 1.0
+            self._topk[s] = 0
+            self._reppen[s] = 1.0
+        req.generated = []
+        req.pending = -1
+        req.done = False
+        req.prefix_digests = self.prefix_digests(req.prompt)
+        self.stats["preempted"] += 1
+        return req
+
+    def set_pool_pressure(self, pages: int) -> None:
+        """Fault injection (``faults.pool_pressure``): withhold ``pages``
+        full-attention pool pages from NEW admissions, as if a co-tenant
+        grabbed the memory.  Reservation-backed decode of admitted
+        requests is untouched — pressure can only backpressure the
+        queue, never crash in-flight work.  ``0`` restores the full
+        pool.  No-op for dense engines and for models without
+        full-attention paged pools (the SWA ring pool is exact-fit by
+        construction and must never be squeezed)."""
+        if not self.paged or not self._has_attn:
+            return
+        self._alloc.withheld = max(0, int(pages))
 
     # -- request intake --------------------------------------------------
 

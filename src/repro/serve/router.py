@@ -14,37 +14,64 @@ replica minimizing the Eq. 2-style estimated completion time
                                         + prefill_calls_for(r)
                                         + queued(p)))
                 * flops_per_token(p) / CompNode.speed(p)
+                * lat_ewma(p)
 
 admission-aware: every jitted chunked-prefill call still ahead of the
 replica (its queue's, prefix-sharing discounts applied, plus this
 request's own tail) costs ``prefill_call_cost`` token-equivalents of
 dispatch overhead, and each queued request one admission's worth of
-service latency.  Replicas within ``tie_eps`` of the best ECT are a
-near-tie, broken toward PREFIX AFFINITY — the replica already holding
-(or about to admit) the request's shared prompt-prefix pages — then by
-lowest replica id (fully deterministic).  Placement is subject to the
-replica's free paged blocks (a request is only dispatched to a replica
-whose pool can cover its worst-case reservation on top of everything
-already queued there; otherwise it waits at the head of the shared
-queue — FIFO is never reordered).  A head request that no LIVE replica
-could ever run (heterogeneous fleets: vocab/context/pool gating) drafts
-the fastest capable standby from the backup pool immediately instead of
-waiting for a failure that may never come.
+service latency.  ``lat_ewma`` is the replica's observed tick-latency
+EWMA (1.0 when healthy), so a straggling replica's ECT inflates by
+exactly how slow it has actually been.  Replicas within ``tie_eps`` of
+the best ECT are a near-tie, broken toward PREFIX AFFINITY — the replica
+already holding (or about to admit) the request's shared prompt-prefix
+pages — then by lowest replica id (fully deterministic).  Placement is
+subject to the replica's free paged blocks (a request is only dispatched
+to a replica whose pool can cover its worst-case reservation on top of
+everything already queued there; otherwise it waits at the head of the
+shared queue — FIFO is never reordered).  A head request that no LIVE
+replica could ever run (heterogeneous fleets: vocab/context/pool gating)
+drafts the fastest capable standby from the backup pool immediately
+instead of waiting for a failure that may never come.
+
+**Degraded modes** (see ``serve.faults`` for the injection plane): the
+failure model is no longer binary.  A replica whose tick-latency EWMA
+crosses ``drain_factor`` is **soft-drained** — its in-flight work is
+requeued via the digest-preserving ``drain_requests()`` so victims
+re-share their prefixes on healthier replicas — and receives no new work
+until its EWMA recovers.  A **partitioned** replica is unreachable (no
+dispatch, no engine ticks, no harvest) but its engine state is RETAINED:
+on heal, in-flight decode resumes mid-token without re-prefill; a
+partition outlasting ``partition_timeout`` escalates to the crash path.
+A head-of-line request held for more than ``hol_patience`` ticks (its
+worst-case page reservation fits nowhere because the pools are
+fragmented) **preempts** the newest admitted request on its best
+replica — preempted work is requeued-from-prompt behind it, never
+dropped, and pays no retry budget.  Every fault-caused
+requeue-from-prompt (crash, soft-drain, partition timeout) costs the
+victim one retry; a request exhausting ``max_retries`` stops consuming
+the fleet and fails terminally with outcome ``failed_retries``.
 
 Fault tolerance reuses the broker verbatim: every replica's node is
 registered ``active``, every standby replica's node ``backup``.  A
-heartbeat round can kill a replica mid-decode; the broker then drafts
-the backup whose device speed best matches the dead one, the router
-activates the corresponding standby engine, and the dead replica's
-in-flight requests (admitted slots AND its internal queue) are re-queued
-at the FRONT of the shared queue from their prompts — the KV/pages died
-with the replica, so they re-prefill from scratch; nothing is ever
-silently dropped.  Drained requests keep their prefix digests
-(``drain_requests`` stamps them), so same-prefix victims still
-co-locate by affinity and re-share their prefix pages on the
-survivor.  Requests on unaffected replicas are untouched (slot
-isolation keeps their greedy decode bitwise-identical to a no-failure
-run).
+heartbeat round can kill a replica mid-decode (standbys are pinged by
+the same seeded process — a dead standby is dropped, never drafted); the
+broker then drafts the backup whose device speed best matches the dead
+one, the router activates the corresponding standby engine, and the dead
+replica's in-flight requests (admitted slots AND its internal queue) are
+re-queued at the FRONT of the shared queue from their prompts — the
+KV/pages died with the replica, so they re-prefill from scratch; nothing
+is ever silently dropped.  Drained requests keep their prefix digests
+(``drain_requests`` stamps them), so same-prefix victims still co-locate
+by affinity and re-share their prefix pages on the survivor.  Requests
+on unaffected replicas are untouched (slot isolation keeps their greedy
+decode bitwise-identical to a no-failure run).
+
+``run()`` returns a ``FleetResult``: completed requests, terminally
+failed requests (every one stamped with a structured ``outcome``), and
+a per-request placement/retry/latency trace — partial results are never
+raised away.  ``run(strict=True)`` restores the old contract and raises
+when anything failed.
 
 Replicas may be heterogeneous in BOTH dimensions: different simulated
 devices (speed skews placement toward fast peers) and different
@@ -55,7 +82,7 @@ can actually run it).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 import jax
 
@@ -63,8 +90,12 @@ from repro.core.broker import Broker
 from repro.core.perfmodel import (DEVICE_CATALOG, LINK_REGIMES, CompNode,
                                   DeviceSpec, LinkSpec)
 from repro.serve.engine import Request, ServingEngine
+from repro.serve.faults import FaultPlan
 
 DeviceLike = Union[str, DeviceSpec, CompNode]
+
+# terminal request outcomes (Request.outcome)
+OUTCOMES = ("ok", "failed_retries", "failed_unservable", "deadline_exceeded")
 
 
 def sim_node(device: DeviceLike, *,
@@ -89,7 +120,12 @@ def _flops_per_token(engine: ServingEngine) -> float:
 
 @dataclass
 class Replica:
-    """One engine bound to one simulated device."""
+    """One engine bound to one simulated device, plus its degraded-mode
+    state: ``lat_ewma`` (observed tick-latency EWMA, 1.0 = healthy)
+    scales its ECT and triggers soft-drain; ``busy_ticks`` counts the
+    remaining fleet ticks of a straggling engine tick still in flight;
+    ``partition_start`` >= 0 marks it unreachable (engine state
+    retained) until ``partitioned_until``."""
     replica_id: int
     engine: ServingEngine
     node: CompNode
@@ -97,29 +133,89 @@ class Replica:
     alive: bool = True
     served: List[int] = field(default_factory=list)   # completed req_ids
     _harvested: int = 0        # prefix of engine.finished already collected
+    # -- degraded-mode state (driven by FleetRouter + serve.faults) -----
+    lat_ewma: float = 1.0      # tick-latency EWMA; multiplies the ECT
+    busy_ticks: int = 0        # straggler: fleet ticks left in current tick
+    straggle_factor: float = 1.0
+    straggle_until: int = 0    # fleet tick the straggle episode ends
+    partition_start: int = -1  # fleet tick the partition began (-1 = none)
+    partitioned_until: int = 0
+    pressure_until: int = 0    # fleet tick pool_pressure lifts
+    soft_drained: bool = False  # already drained this degraded episode
+
+
+@dataclass
+class FleetResult:
+    """What ``FleetRouter.run()`` produces: ``completed`` requests in
+    finish order, terminally ``failed`` requests (each with a structured
+    ``Request.outcome``), a per-request ``traces`` dict (req_id ->
+    placements / retries / outcome / submitted+finished tick / latency),
+    and the total fleet ``ticks`` run.  Iterating or ``len()``-ing the
+    result walks the completed requests, so pre-existing
+    ``for r in router.run()`` call sites keep working."""
+    completed: List[Request]
+    failed: List[Request]
+    traces: Dict[int, dict]
+    ticks: int
+
+    @property
+    def ok(self) -> bool:
+        return not self.failed
+
+    def outcomes(self) -> Dict[str, int]:
+        counts: Dict[str, int] = {}
+        for req in self.completed + self.failed:
+            counts[req.outcome] = counts.get(req.outcome, 0) + 1
+        return counts
+
+    def __iter__(self) -> Iterator[Request]:
+        return iter(self.completed)
+
+    def __len__(self) -> int:
+        return len(self.completed)
+
+    def __repr__(self) -> str:
+        return (f"FleetResult(completed={len(self.completed)}, "
+                f"failed={len(self.failed)}, ticks={self.ticks}, "
+                f"outcomes={self.outcomes()})")
 
 
 class FleetRouter:
     """N serving replicas + standby spares behind one FIFO queue, with
-    broker membership/failover.  See the module docstring for semantics.
+    broker membership/failover and degraded-mode fault handling.  See
+    the module docstring for semantics.
 
     ``replicas`` / ``standby``: sequences of ``(engine, device)`` pairs,
     ``device`` a ``DEVICE_CATALOG`` name, a ``DeviceSpec``, or a
     pre-built ``CompNode`` (whose ``reliability`` drives the seeded
     heartbeat failure process).
 
+    ``fault_plan``: an optional ``serve.faults.FaultPlan`` consumed at
+    the start of every tick (deterministic fault injection).
+    ``drain_factor``: tick-latency EWMA at which a replica is
+    soft-drained and stops receiving new work.  ``hol_patience``: held
+    ticks before a head-of-line request preempts the newest admitted
+    request on its best replica.  ``partition_timeout``: ticks after
+    which an unhealed partition escalates to a crash.
+
     ``stats`` counts ``placed`` dispatches, ``completed`` requests,
     replica ``failures``, ``requeued`` in-flight requests, backup-pool
-    ``replacements``, and head-of-line ``held`` ticks (no replica had
-    pool room for the queue head).  ``placements`` records every
+    ``replacements``, head-of-line ``held`` ticks, plus the degraded-mode
+    counters: ``soft_drains`` / ``preempted`` / ``straggles`` /
+    ``partitions`` / ``partition_heals`` / ``partition_escalations`` /
+    ``pool_pressure`` / ``injected_crashes`` / ``standby_deaths`` and
+    the terminal failure outcomes.  ``placements`` records every
     req_id -> [replica_id, ...] dispatch history (len > 1 = re-queued
-    after a failure).
+    after a fault).
     """
 
     def __init__(self, replicas: Sequence[Tuple[ServingEngine, DeviceLike]],
                  standby: Sequence[Tuple[ServingEngine, DeviceLike]] = (),
                  *, seed: int = 0, heartbeat_s: float = 10.0,
-                 prefill_call_cost: float = 4.0, tie_eps: float = 0.02):
+                 prefill_call_cost: float = 4.0, tie_eps: float = 0.02,
+                 fault_plan: Optional[FaultPlan] = None,
+                 drain_factor: float = 3.0, ewma_alpha: float = 0.5,
+                 hol_patience: int = 8, partition_timeout: int = 32):
         if not replicas:
             raise ValueError("FleetRouter: at least one replica required")
         # admission-aware ECT: each outstanding jitted prefill call costs
@@ -129,6 +225,11 @@ class FleetRouter:
         # near-tie, broken toward prefix affinity then replica id.
         self.prefill_call_cost = prefill_call_cost
         self.tie_eps = tie_eps
+        self.fault_plan = fault_plan
+        self.drain_factor = drain_factor
+        self.ewma_alpha = ewma_alpha
+        self.hol_patience = hol_patience
+        self.partition_timeout = partition_timeout
         self.broker = Broker(seed=seed, heartbeat_s=heartbeat_s)
         self.replicas: List[Replica] = []
         self._standby: Dict[int, Replica] = {}      # node_id -> Replica
@@ -155,15 +256,36 @@ class FleetRouter:
                 rid += 1
         self.queue: List[Request] = []
         self.finished: List[Request] = []
+        self.failed: List[Request] = []
         self.placements: Dict[int, List[int]] = {}
+        self.tick_count = 0
         self._submit_order: Dict[int, int] = {}     # req_id -> arrival seq
+        self._order_seq = 0
+        self._submitted_at: Dict[int, int] = {}     # req_id -> submit tick
+        self._finished_at: Dict[int, int] = {}      # req_id -> terminal tick
+        self._hol_req: Optional[int] = None         # held head req_id
+        self._hol_held = 0                          # consecutive held ticks
+        self._preempted_ids: set = set()            # ever-preempted req_ids
         self.stats = {"placed": 0, "completed": 0, "failures": 0,
-                      "requeued": 0, "replacements": 0, "held": 0}
+                      "requeued": 0, "replacements": 0, "held": 0,
+                      "soft_drains": 0, "preempted": 0, "straggles": 0,
+                      "partitions": 0, "partition_heals": 0,
+                      "partition_escalations": 0, "pool_pressure": 0,
+                      "injected_crashes": 0, "standby_deaths": 0,
+                      "failed_retries": 0, "failed_unservable": 0,
+                      "deadline_exceeded": 0}
 
     # -- membership ------------------------------------------------------
 
     def live_replicas(self) -> List[Replica]:
         return [r for r in self.replicas if r.alive]
+
+    def _reachable(self, rep: Replica) -> bool:
+        return rep.alive and rep.partition_start < 0
+
+    def _healthy(self, rep: Replica) -> bool:
+        """Eligible for NEW work: reachable and not latency-degraded."""
+        return self._reachable(rep) and rep.lat_ewma < self.drain_factor
 
     def _servable_somewhere(self, req: Request) -> bool:
         pool = self.live_replicas() + list(self._standby.values())
@@ -177,8 +299,14 @@ class FleetRouter:
                 f"FleetRouter: no replica (live or standby) can ever serve "
                 f"request {req.req_id} (prompt={len(req.prompt)} tokens, "
                 f"max_new={req.max_new}) — check vocab/cache_len/pool sizes")
-        self._submit_order.setdefault(req.req_id, len(self._submit_order))
+        self._note_order(req)
+        self._submitted_at.setdefault(req.req_id, self.tick_count)
         self.queue.append(req)
+
+    def _note_order(self, req: Request) -> None:
+        if req.req_id not in self._submit_order:
+            self._submit_order[req.req_id] = self._order_seq
+            self._order_seq += 1
 
     def _ect(self, rep: Replica, req: Request) -> float:
         """Eq. 2-style estimated completion time of ``req`` on ``rep``,
@@ -188,14 +316,17 @@ class FleetRouter:
         request's own ``ceil(tail/chunk)`` — costs
         ``prefill_call_cost`` token-equivalents of dispatch overhead,
         and each already-queued request one more admission's worth of
-        service latency.  Two replicas with equal token backlogs no
+        service latency.  The whole estimate is scaled by the replica's
+        observed tick-latency EWMA (1.0 when healthy), so stragglers
+        price themselves out of placement by exactly how slow they have
+        actually been.  Two replicas with equal token backlogs no
         longer tie when one of them has the backlog fragmented across
         many short prompts (more calls, slower wall clock)."""
         eng = rep.engine
         tokens = eng.pending_tokens + len(req.prompt) + req.max_new
         calls = eng.pending_prefill_calls + eng.prefill_calls_for(req.prompt)
         tokens += self.prefill_call_cost * (calls + len(eng.queue))
-        return tokens * rep.flops_per_token / rep.node.speed
+        return tokens * rep.flops_per_token / rep.node.speed * rep.lat_ewma
 
     def _affinity(self, rep: Replica, req: Request) -> int:
         """Prefix-affinity score of placing ``req`` on ``rep``: resident
@@ -240,11 +371,16 @@ class FleetRouter:
 
     def _dispatch(self) -> None:
         """Place queued requests, FIFO: the head request goes to the
-        min-ECT live replica whose paged pool can still cover its
-        worst-case reservation; if none currently can (but one could
-        later), the head WAITS — later requests are not reordered past
-        it.  A head that no live replica could EVER run drafts a capable
-        standby from the backup pool, or raises (never a silent drop)."""
+        min-ECT healthy replica (reachable, not latency-degraded) whose
+        paged pool can still cover its worst-case reservation; if none
+        currently can (but one could later), the head WAITS — later
+        requests are not reordered past it — and after ``hol_patience``
+        held ticks the newest admitted request on the head's best
+        replica is preempted to make room (requeued-from-prompt, never
+        dropped).  A head that no live replica could EVER run drafts a
+        capable standby from the backup pool, or fails terminally with
+        outcome ``failed_unservable`` (never a silent drop, never a
+        raise that loses everyone else's results)."""
         while self.queue:
             req = self.queue[0]
             able = [r for r in self.live_replicas()
@@ -252,17 +388,21 @@ class FleetRouter:
             if not able:
                 drafted = self._draft_capable_standby(req)
                 if drafted is None:
-                    raise RuntimeError(
-                        f"FleetRouter: request {req.req_id} became "
-                        f"unservable after fleet churn (no live or standby "
-                        f"replica can run it)")
+                    self.queue.pop(0)
+                    self._fail(req, "failed_unservable")
+                    continue
                 able = [drafted]
             ready = [r for r in able
-                     if r.engine.free_pages
+                     if self._healthy(r)
+                     and r.engine.free_pages
                      >= r.engine.blocks_needed(len(req.prompt), req.max_new)]
             if not ready:
                 self.stats["held"] += 1
+                self._hold_head(req, able)
+                if self._hol_held == 0:
+                    continue           # preemption made room: retry now
                 return
+            self._hol_req, self._hol_held = None, 0
             # near-tie break toward prefix affinity: replicas within
             # tie_eps of the best ECT are effectively interchangeable on
             # load, so prefer the one already holding (or about to admit)
@@ -280,11 +420,95 @@ class FleetRouter:
             self.placements.setdefault(req.req_id, []).append(best.replica_id)
             self.stats["placed"] += 1
 
+    def _hold_head(self, req: Request, able: List[Replica]) -> None:
+        """The queue head fits nowhere right now.  Track how long THIS
+        head has been held; past ``hol_patience`` consecutive held
+        ticks, satisfy its worst-case reservation by preempting the
+        newest admitted request(s) on its best healthy replica —
+        fragmented pools full of long-running work must not livelock
+        the whole queue.  Victims are requeued-from-prompt BEHIND the
+        head (their submission order is demoted — preemption
+        deliberately reorders in the head's favor) and pay no retry
+        budget.  Resets ``_hol_held`` to 0 when preemption made room.
+
+        Anti-thrash: a head that was itself a preemption victim never
+        triggers another preemption (it waits for natural drain) — two
+        requests too big to coexist would otherwise evict each other
+        forever, each eviction resetting the other's decode progress."""
+        if self._hol_req != req.req_id:
+            self._hol_req, self._hol_held = req.req_id, 0
+        self._hol_held += 1
+        if self._hol_held <= self.hol_patience:
+            return
+        if req.req_id in self._preempted_ids:
+            return
+        cands = [r for r in able if self._healthy(r)]
+        if not cands:
+            return                      # held on health, not pages: wait
+        ects = {r.replica_id: self._ect(r, req) for r in cands}
+        best = min(cands, key=lambda r: (ects[r.replica_id], r.replica_id))
+        need = best.engine.blocks_needed(len(req.prompt), req.max_new)
+        victims: List[Request] = []
+        while best.engine.free_pages < need:
+            v = best.engine.preempt_newest()
+            if v is None:
+                break
+            victims.append(v)
+        if not victims:
+            return
+        self.stats["preempted"] += len(victims)
+        for v in victims:
+            # demote behind the head: preemption exists to serve the
+            # head, so the victim must not outrank it on requeue
+            self._preempted_ids.add(v.req_id)
+            self._submit_order[v.req_id] = self._order_seq
+            self._order_seq += 1
+        self._requeue(victims, count_retry=False)
+        if best.engine.free_pages >= need:
+            self._hol_held = 0          # room made: dispatch the head now
+
     # -- failure handling -------------------------------------------------
+
+    def _fail(self, req: Request, outcome: str) -> None:
+        """Terminally fail one request with a structured outcome."""
+        assert outcome in OUTCOMES and outcome != "ok"
+        req.outcome = outcome
+        self.failed.append(req)
+        self._finished_at[req.req_id] = self.tick_count
+        self.stats[outcome] += 1
+
+    def _requeue(self, reqs: List[Request], *,
+                 count_retry: bool = True) -> None:
+        """Put drained/preempted requests back at the front of the shared
+        queue in GLOBAL submission order.  Fault-caused requeues
+        (``count_retry=True``) cost each victim one retry; a victim past
+        its ``max_retries`` budget fails terminally instead of riding
+        the fleet forever.  Requests admitted directly via
+        ``engine.submit()`` (bypassing the router) join the order book
+        here, in arrival-at-drain order."""
+        kept: List[Request] = []
+        for req in reqs:
+            self._note_order(req)
+            self._submitted_at.setdefault(req.req_id, self.tick_count)
+            if count_retry:
+                req.retries += 1
+                if req.retries > req.max_retries:
+                    self._fail(req, "failed_retries")
+                    continue
+            kept.append(req)
+        self.queue[:0] = kept
+        # restore GLOBAL submission order: with several replicas dying in
+        # one heartbeat round (or across rounds before redispatch), the
+        # per-replica prepends alone would interleave newer requests
+        # ahead of older ones
+        self.queue.sort(key=lambda r: self._submit_order[r.req_id])
+        self.stats["requeued"] += len(kept)
 
     def _harvest(self, rep: Replica) -> None:
         for req in rep.engine.finished[rep._harvested:]:
+            req.outcome = "ok"
             self.finished.append(req)
+            self._finished_at[req.req_id] = self.tick_count
             rep.served.append(req.req_id)
             self.stats["completed"] += 1
         rep._harvested = len(rep.engine.finished)
@@ -295,15 +519,12 @@ class FleetRouter:
             return
         self._harvest(rep)                 # finished outputs survive
         rep.alive = False
-        requeue = rep.engine.drain_requests()
-        self.queue[:0] = requeue
-        # restore GLOBAL submission order: with several replicas dying in
-        # one heartbeat round (or across rounds before redispatch), the
-        # per-replica prepends alone would interleave newer requests
-        # ahead of older ones
-        self.queue.sort(key=lambda r: self._submit_order[r.req_id])
+        # the corpse carries no degraded state
+        rep.partition_start = -1
+        rep.straggle_factor, rep.straggle_until = 1.0, 0
+        rep.busy_ticks = 0
+        self._requeue(rep.engine.drain_requests())
         self.stats["failures"] += 1
-        self.stats["requeued"] += len(requeue)
         sub = self.broker.draft_backup(node_id)
         if sub is not None:
             drafted = self._standby.pop(sub.node_id)
@@ -312,61 +533,214 @@ class FleetRouter:
             self.stats["replacements"] += 1
 
     def heartbeat_round(self) -> List[int]:
-        """One broker ping-pong round over the replica nodes: each node
-        fails with (1 - reliability), seeded — a failure mid-decode kills
-        the replica, requeues its in-flight requests from their prompts,
-        and drafts a speed-matched standby.  Returns dead node ids."""
+        """One broker ping-pong round over ALL registered nodes —
+        replicas and standbys alike fail with (1 - reliability), seeded.
+        A replica failure mid-decode kills it, requeues its in-flight
+        requests from their prompts, and drafts a speed-matched standby;
+        a standby failure just removes it from the draft pool (a dead
+        standby must never be drafted).  Returns dead node ids."""
         dead = self.broker.heartbeat_round()
         for nid in dead:
-            self._on_death(nid)
+            if nid in self._standby:
+                self._standby.pop(nid)
+                self.stats["standby_deaths"] += 1
+            else:
+                self._on_death(nid)
         return dead
 
     def fail_replica(self, replica_id: int) -> None:
         """Deterministic failure injection (tests/examples): kill one
         replica through the same broker quit -> drain -> requeue ->
-        draft path the heartbeat uses."""
-        rep = next(r for r in self.replicas if r.replica_id == replica_id)
+        draft path the heartbeat uses.  Killing an already-dead replica
+        is a no-op (like ``_on_death``); an id the fleet has never
+        activated raises a descriptive ``ValueError``."""
+        rep = next((r for r in self.replicas if r.replica_id == replica_id),
+                   None)
+        if rep is None:
+            known = sorted(r.replica_id for r in self.replicas)
+            waiting = sorted(r.replica_id for r in self._standby.values())
+            raise ValueError(
+                f"FleetRouter.fail_replica: unknown replica id "
+                f"{replica_id!r} (active/dead replicas: {known}; "
+                f"undrafted standbys: {waiting})")
+        if not rep.alive:
+            return
         self.broker.quit(rep.node.node_id, graceful=False)
         self._on_death(rep.node.node_id)
+
+    # -- fault plane ------------------------------------------------------
+
+    def _kill(self, rep: Replica) -> None:
+        self.broker.quit(rep.node.node_id, graceful=False)
+        self._on_death(rep.node.node_id)
+
+    def _fault_tick(self) -> None:
+        """Expire elapsed fault episodes, then apply this tick's faults
+        from the plan.  Runs at the START of every tick so a healed
+        partition can receive dispatch the same tick it heals."""
+        t = self.tick_count
+        for rep in self.replicas:
+            if not rep.alive:
+                continue
+            if rep.partition_start >= 0:
+                if t - rep.partition_start >= self.partition_timeout:
+                    # the fleet cannot tell a long partition from a
+                    # death: escalate through the crash path
+                    self.stats["partition_escalations"] += 1
+                    self._kill(rep)
+                    continue
+                if t >= rep.partitioned_until:
+                    rep.partition_start = -1
+                    self.stats["partition_heals"] += 1
+            if rep.straggle_until and t >= rep.straggle_until:
+                rep.straggle_factor, rep.straggle_until = 1.0, 0
+            if rep.pressure_until and t >= rep.pressure_until:
+                rep.engine.set_pool_pressure(0)
+                rep.pressure_until = 0
+        if self.fault_plan is None:
+            return
+        for f in self.fault_plan.at(t):
+            rep = next((r for r in self.replicas
+                        if r.replica_id == f.replica_id and r.alive), None)
+            if rep is None:
+                continue               # dead, or an undrafted standby
+            if f.kind == "crash":
+                self.stats["injected_crashes"] += 1
+                self._kill(rep)
+            elif f.kind == "straggle":
+                rep.straggle_factor = max(rep.straggle_factor, f.factor)
+                rep.straggle_until = max(rep.straggle_until, t + f.duration)
+                self.stats["straggles"] += 1
+            elif f.kind == "partition":
+                if rep.partition_start < 0:
+                    rep.partition_start = t
+                rep.partitioned_until = max(rep.partitioned_until,
+                                            t + f.duration)
+                self.stats["partitions"] += 1
+            elif f.kind == "pool_pressure":
+                rep.engine.set_pool_pressure(f.pages)
+                rep.pressure_until = max(rep.pressure_until, t + f.duration)
+                self.stats["pool_pressure"] += 1
+
+    def _soft_drain(self, rep: Replica) -> None:
+        """The replica's observed tick latency crossed ``drain_factor``:
+        requeue its in-flight work (digest-preserving, so victims
+        re-share prefixes on healthier replicas) instead of letting it
+        crawl.  Once per degraded episode — the flag rearms when the
+        EWMA recovers below the threshold."""
+        if rep.soft_drained:
+            return
+        rep.soft_drained = True
+        self.stats["soft_drains"] += 1
+        victims = rep.engine.drain_requests()
+        if victims:
+            self._requeue(victims)
 
     # -- the serving loop -------------------------------------------------
 
     def tick(self) -> int:
-        """One fleet iteration: dispatch the shared queue, tick every
-        live replica, harvest finished requests.  Returns the number of
-        active slots across the fleet."""
+        """One fleet iteration: apply/expire faults, dispatch the shared
+        queue, tick every reachable replica (a straggler's engine tick
+        spans ``straggle_factor`` fleet ticks; a partitioned replica's
+        engine is frozen), harvest finished requests, update tick-latency
+        EWMAs and soft-drain degraded replicas.  Returns the number of
+        active slots across the fleet (in-flight work on partitioned or
+        mid-tick replicas still counts — it is not lost)."""
+        self._fault_tick()
         self._dispatch()
         n = 0
-        for rep in self.live_replicas():
+        for rep in self.replicas:
+            if not rep.alive:
+                continue
+            if rep.partition_start >= 0:
+                n += rep.engine.n_active      # frozen, not lost
+                continue
+            if rep.busy_ticks > 0:
+                rep.busy_ticks -= 1
+                n += rep.engine.n_active      # straggling mid-tick
+                continue
+            cost = (rep.straggle_factor
+                    if self.tick_count < rep.straggle_until else 1.0)
             n += rep.engine.tick()
             self._harvest(rep)
+            rep.busy_ticks = max(0, int(round(cost)) - 1)
+            rep.lat_ewma += self.ewma_alpha * (cost - rep.lat_ewma)
+            if rep.lat_ewma >= self.drain_factor:
+                self._soft_drain(rep)
+            else:
+                rep.soft_drained = False
+        self.tick_count += 1
         return n
 
     def outstanding(self) -> int:
-        """Requests submitted but not yet completed (shared queue +
-        every live replica's queue and slots)."""
+        """Requests submitted but not yet terminal (shared queue +
+        every live replica's queue and slots — including partitioned
+        replicas, whose in-flight work is retained)."""
         n = len(self.queue)
         for rep in self.live_replicas():
             n += len(rep.engine.queue) + rep.engine.n_active
         return n
 
-    def run(self, max_ticks: int = 10_000,
-            heartbeat_every: int = 0) -> List[Request]:
-        """Serve until every submitted request completed (or
-        ``max_ticks``).  ``heartbeat_every`` > 0 runs a broker heartbeat
-        round every that-many ticks, so seeded failures strike
-        mid-decode."""
+    def _drain_outstanding(self) -> List[Request]:
+        """Pull every non-terminal request out of the system (shared
+        queue + live replicas), in global submission order."""
+        reqs = list(self.queue)
+        self.queue = []
+        for rep in self.live_replicas():
+            reqs.extend(rep.engine.drain_requests())
+        for req in reqs:
+            self._note_order(req)
+        reqs.sort(key=lambda r: self._submit_order[r.req_id])
+        return reqs
+
+    def run(self, max_ticks: int = 10_000, heartbeat_every: int = 0,
+            *, strict: bool = False) -> FleetResult:
+        """Serve until every submitted request reached a TERMINAL
+        outcome (or ``max_ticks``).  ``heartbeat_every`` > 0 runs a
+        broker heartbeat round every that-many ticks, so seeded failures
+        strike mid-decode.  Returns a ``FleetResult`` — completed plus
+        terminally failed requests with per-request traces; partial
+        results survive fleet death and deadline instead of being raised
+        away.  ``strict=True`` restores the old contract: raise if
+        anything failed (completed work is still on ``self.finished``)."""
+        start = self.tick_count
         for t in range(max_ticks):
             if heartbeat_every and t > 0 and t % heartbeat_every == 0:
                 self.heartbeat_round()
-            n = self.tick()
-            if n == 0 and not self.queue:
+            self.tick()
+            if not self.outstanding():
                 break
         if self.outstanding():
-            # never return partial results as success
-            why = ("fleet died (backup pool exhausted)"
-                   if not self.live_replicas() else f"max_ticks={max_ticks}")
+            # max_ticks exhausted with work still in flight: every
+            # leftover gets a terminal outcome — nothing silently drops
+            outcome = ("deadline_exceeded" if self.live_replicas()
+                       else "failed_unservable")
+            for req in self._drain_outstanding():
+                self._fail(req, outcome)
+        traces = {req.req_id: self._trace(req)
+                  for req in self.finished + self.failed}
+        result = FleetResult(completed=list(self.finished),
+                             failed=list(self.failed), traces=traces,
+                             ticks=self.tick_count - start)
+        if strict and self.failed:
             raise RuntimeError(
-                f"FleetRouter: {self.outstanding()} requests outstanding "
-                f"after {why}")
-        return self.finished
+                f"FleetRouter: {len(self.failed)} requests failed "
+                f"terminally ({result.outcomes()}) after "
+                f"{result.ticks} ticks — strict mode refuses partial "
+                f"results")
+        return result
+
+    def _trace(self, req: Request) -> dict:
+        sub = self._submitted_at.get(req.req_id)
+        fin = self._finished_at.get(req.req_id)
+        return {
+            "placements": list(self.placements.get(req.req_id, [])),
+            "retries": req.retries,
+            "outcome": req.outcome,
+            "submitted_tick": sub,
+            "finished_tick": fin,
+            "latency_ticks": (fin - sub
+                              if sub is not None and fin is not None
+                              else None),
+            "generated": len(req.generated),
+        }

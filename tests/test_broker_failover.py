@@ -229,3 +229,55 @@ def test_churn_sim_deterministic_and_all_assigned():
     assert results[0] == results[1]
     assert results[0]["all_tasks_assigned"]
     assert results[0]["failures"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Standbys are not immortal: the heartbeat pings the backup pool too
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_pings_backup_pool():
+    """The seed heartbeat only pinged actives, so a long-dead standby
+    could be drafted as a replacement.  Backups now fail by the same
+    seeded (1 - reliability) process and dead ones leave the pool."""
+    broker = Broker(seed=0)
+    broker.register(_node("a100", reliability=1.0), pool="active")
+    doomed = broker.register(_node("rtx3080", reliability=0.0),
+                             pool="backup")
+    dead = broker.heartbeat_round()
+    assert dead == [doomed]
+    assert doomed not in broker.backup and not broker.backup
+    assert broker.active[0].online                   # active untouched
+
+
+def test_dead_backup_never_drafted():
+    broker = Broker(seed=0)
+    active = broker.register(_node("rtx3080", reliability=1.0),
+                             pool="active")
+    broker.register(_node("rtx3080", reliability=0.0), pool="backup")
+    broker.submit_job(_bert_dag(), n_parts=1)
+    broker.heartbeat_round()                 # the standby dies here
+    assert not broker.backup
+    # the active now fails with an unfinished task: there must be no
+    # corpse left to draft — draft_backup reports the empty pool
+    assert broker.draft_backup(active) is None
+    broker.quit(active, graceful=False)
+    assert all(e.kind != "replace" for e in broker.events)
+
+
+def test_active_failure_outcomes_independent_of_backup_pool_size():
+    """Actives draw from the seeded RNG before backups each round, so a
+    given seed produces the same per-round active deaths whether or not
+    standbys are registered."""
+    def active_deaths(n_backup):
+        broker = Broker(seed=5)
+        ids = [broker.register(_node("rtx3080", reliability=0.9),
+                               pool="active") for _ in range(6)]
+        for _ in range(n_backup):
+            broker.register(_node("rtx3080", reliability=1.0),
+                            pool="backup")
+        deaths = []
+        for _ in range(10):
+            deaths.append([nid for nid in broker.heartbeat_round()
+                           if nid in ids])
+        return deaths
+    assert active_deaths(0) == active_deaths(3)

@@ -1,0 +1,361 @@
+"""Degraded-mode fault tolerance: the serve.faults injection plane and
+the FleetRouter machinery that survives it.
+
+Covers the fault taxonomy one kind at a time — straggle (ECT inflation,
+soft-drain past the threshold, mild stragglers left alone), partition
+(state retained across heal, escalation to crash past the timeout),
+pool_pressure (admission backpressure only, never a decode crash) — plus
+the head-of-line preemption path, retry budgets with structured
+outcomes, the FleetResult trace surface, and the dead-standby
+regressions.  Every survivor is checked bitwise against a no-fault
+reference run: faults may move work around, but they must never change
+what a completed request generated.
+"""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.transformer import init_params
+from repro.serve.engine import Request, ServingEngine
+from repro.serve.faults import FAULT_KINDS, Fault, FaultPlan
+from repro.serve.router import FleetRouter, sim_node
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = dataclasses.replace(get_smoke_config("gpt3-24l"), vocab_size=128,
+                              d_model=128, d_ff=256, n_heads=4, n_kv_heads=4,
+                              head_dim=32)
+    return init_params(jax.random.PRNGKey(0), cfg), cfg
+
+
+def _engine(params, cfg, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("cache_len", 64)
+    kw.setdefault("chunk", 8)
+    kw.setdefault("paged", True)
+    kw.setdefault("page_size", 16)
+    return ServingEngine(params, cfg, **kw)
+
+
+def _requests(n, cfg, max_new=6, **kw):
+    return [Request(i, [(3 + 5 * i + j) % cfg.vocab_size
+                        for j in range(4 + i % 3)], max_new=max_new, **kw)
+            for i in range(n)]
+
+
+def _reference(params, cfg, n, devices=("rtx4090", "rtx3080"), max_new=6):
+    """No-fault fleet run over the canonical workload: req_id -> tokens."""
+    router = FleetRouter([(_engine(params, cfg), d) for d in devices])
+    for r in _requests(n, cfg, max_new=max_new):
+        router.submit(r)
+    res = router.run()
+    assert sorted(r.req_id for r in res.completed) == list(range(n))
+    return {r.req_id: list(r.generated) for r in res.completed}
+
+
+# ---------------------------------------------------------------------------
+# The plan itself
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError, match="unknown kind"):
+        Fault(0, 0, "meteor")
+    with pytest.raises(ValueError, match="tick"):
+        Fault(-1, 0, "crash")
+    with pytest.raises(ValueError, match="factor"):
+        Fault(0, 0, "straggle", factor=0.5)
+    with pytest.raises(ValueError, match="duration"):
+        Fault(0, 0, "partition", duration=0)
+    with pytest.raises(ValueError, match="page"):
+        Fault(0, 0, "pool_pressure", pages=0)
+    with pytest.raises(TypeError):
+        FaultPlan().add("crash")
+
+
+def test_fault_plan_seeded_deterministic():
+    kw = dict(ticks=50, replica_ids=[0, 1, 2], rate=0.2)
+    a = FaultPlan.seeded(7, **kw)
+    b = FaultPlan.seeded(7, **kw)
+    c = FaultPlan.seeded(8, **kw)
+    assert list(a) == list(b) and len(a) > 0
+    assert list(a) != list(c)
+    assert all(f.kind in FAULT_KINDS for f in a)
+    # at() returns exactly the faults of that tick, grouped
+    assert sorted(f.tick for f in a) == [f.tick for f in a]
+    assert sum(len(a.at(t)) for t in range(50)) == len(a)
+
+
+# ---------------------------------------------------------------------------
+# Straggle: ECT inflation, soft-drain, mild degradation tolerated
+# ---------------------------------------------------------------------------
+
+def test_straggler_soft_drained_and_work_moves(tiny):
+    params, cfg = tiny
+    ref = _reference(params, cfg, 4)
+    plan = FaultPlan([Fault(2, 0, "straggle", factor=8.0, duration=10)])
+    router = FleetRouter([(_engine(params, cfg), "rtx4090"),
+                          (_engine(params, cfg), "rtx3080")],
+                         fault_plan=plan)
+    for r in _requests(4, cfg):
+        router.submit(r)
+    res = router.run(max_ticks=300)
+    assert sorted(r.req_id for r in res.completed) == [0, 1, 2, 3]
+    assert {i: list(r.generated) for i, r in
+            ((r.req_id, r) for r in res.completed)} == ref
+    assert router.stats["straggles"] >= 1
+    assert router.stats["soft_drains"] >= 1
+    # the straggler's ECT multiplier actually rose
+    assert router.replicas[0].lat_ewma > 1.0 or \
+        router.stats["soft_drains"] >= 1
+    # soft-drain victims were requeued-from-prompt (one retry each) and
+    # re-placed — nothing was dropped, and the survivors are bitwise ok
+    victims = [r for r in res.completed if r.retries > 0]
+    assert victims, "an 8x straggler with in-flight work must soft-drain"
+    for v in victims:
+        assert len(router.placements[v.req_id]) > 1
+
+
+def test_mild_straggler_not_drained(tiny):
+    """A replica straggling below drain_factor keeps its work: the EWMA
+    prices it out of NEW placement but in-flight decode rides it out."""
+    params, cfg = tiny
+    ref = _reference(params, cfg, 4)
+    plan = FaultPlan([Fault(2, 0, "straggle", factor=2.0, duration=4)])
+    router = FleetRouter([(_engine(params, cfg), "rtx4090"),
+                          (_engine(params, cfg), "rtx3080")],
+                         fault_plan=plan)
+    for r in _requests(4, cfg):
+        router.submit(r)
+    res = router.run(max_ticks=300)
+    assert router.stats["soft_drains"] == 0
+    assert all(r.retries == 0 for r in res.completed)
+    assert {r.req_id: list(r.generated) for r in res.completed} == ref
+
+
+# ---------------------------------------------------------------------------
+# Partition: state retained on heal, escalation past the timeout
+# ---------------------------------------------------------------------------
+
+def test_partition_heals_without_reprefill(tiny):
+    params, cfg = tiny
+    ref = _reference(params, cfg, 4)
+    plan = FaultPlan([Fault(2, 0, "partition", duration=5)])
+    router = FleetRouter([(_engine(params, cfg), "rtx4090"),
+                          (_engine(params, cfg), "rtx3080")],
+                         fault_plan=plan)
+    for r in _requests(4, cfg):
+        router.submit(r)
+    for _ in range(3):
+        router.tick()
+    frozen = {r.req_id for r in router.replicas[0].engine.active
+              if r is not None}
+    assert frozen, "placement must have put work on replica 0 by tick 3"
+    res = router.run(max_ticks=300)
+    assert router.stats["partitions"] >= 1
+    assert router.stats["partition_heals"] >= 1
+    assert router.stats["requeued"] == 0
+    assert sorted(r.req_id for r in res.completed) == [0, 1, 2, 3]
+    assert {r.req_id: list(r.generated) for r in res.completed} == ref
+    # the in-flight work survived the partition in place: no second
+    # placement, no retry, no re-admission (re-prefill) on the engine
+    for r in res.completed:
+        if r.req_id in frozen:
+            assert router.placements[r.req_id] == [0]
+            assert r.retries == 0
+    # every admission on replica 0 is accounted by exactly one placement
+    # there: nothing was re-admitted (= re-prefilled) after the heal
+    assert router.replicas[0].engine.stats["admitted"] == \
+        sum(pl.count(0) for pl in router.placements.values())
+
+
+def test_partition_escalates_to_crash_past_timeout(tiny):
+    params, cfg = tiny
+    ref = _reference(params, cfg, 4)
+    plan = FaultPlan([Fault(2, 0, "partition", duration=100)])
+    router = FleetRouter([(_engine(params, cfg), "rtx4090"),
+                          (_engine(params, cfg), "rtx3080")],
+                         fault_plan=plan, partition_timeout=4)
+    for r in _requests(4, cfg):
+        router.submit(r)
+    res = router.run(max_ticks=300)
+    assert router.stats["partition_escalations"] == 1
+    assert router.stats["failures"] == 1
+    assert not router.replicas[0].alive
+    assert sorted(r.req_id for r in res.completed) == [0, 1, 2, 3]
+    assert {r.req_id: list(r.generated) for r in res.completed} == ref
+    # the escalation went through the crash path: victims re-prefilled
+    # on the survivor and paid one retry
+    victims = [r for r in res.completed if r.retries == 1]
+    assert victims and all(router.placements[v.req_id][-1] == 1
+                           for v in victims)
+
+
+# ---------------------------------------------------------------------------
+# Pool pressure: admission backpressure only, never a decode crash
+# ---------------------------------------------------------------------------
+
+def test_pool_pressure_backpressures_admission_only(tiny):
+    params, cfg = tiny
+    eng = _engine(params, cfg, num_blocks=4)
+    assert eng.free_pages == 4
+    eng.set_pool_pressure(3)
+    assert eng.free_pages == 1
+    eng.submit(Request(0, [1, 2, 3], max_new=20))    # needs 2 pages
+    eng.tick()
+    assert eng.stats["backpressure"] == 1 and eng.n_active == 0
+    eng.set_pool_pressure(0)
+    eng.tick()
+    assert eng.n_active == 1                          # pressure lifted
+    # dense engines are page-unconstrained: pressure is a no-op
+    dense = ServingEngine(params, cfg, slots=2, cache_len=64, chunk=8)
+    dense.set_pool_pressure(10)
+    assert dense.free_pages > 1 << 20
+
+
+def test_pool_pressure_fault_expires(tiny):
+    params, cfg = tiny
+    ref = _reference(params, cfg, 4)
+    plan = FaultPlan([Fault(1, 0, "pool_pressure", pages=64, duration=4),
+                      Fault(1, 1, "pool_pressure", pages=64, duration=4)])
+    router = FleetRouter([(_engine(params, cfg), "rtx4090"),
+                          (_engine(params, cfg), "rtx3080")],
+                         fault_plan=plan)
+    for r in _requests(4, cfg):
+        router.submit(r)
+    res = router.run(max_ticks=300)
+    assert router.stats["pool_pressure"] == 2
+    assert router.replicas[0].engine._alloc.withheld == 0   # restored
+    assert sorted(r.req_id for r in res.completed) == [0, 1, 2, 3]
+    assert {r.req_id: list(r.generated) for r in res.completed} == ref
+
+
+# ---------------------------------------------------------------------------
+# Head-of-line preemption
+# ---------------------------------------------------------------------------
+
+def test_hol_patience_preempts_newest(tiny):
+    """A big head request held past hol_patience preempts the NEWEST
+    admitted request on its best replica; the victim is requeued from
+    its prompt (no retry cost) and both eventually complete bitwise."""
+    params, cfg = tiny
+    # 5-page pool: two small long-runners reserve 2 pages each, the big
+    # head needs 3 -> held until preemption frees the newest
+    eng = _engine(params, cfg, num_blocks=5)
+    router = FleetRouter([(eng, "rtx4090")], hol_patience=2)
+    small = [Request(i, [3 + i, 4 + i, 5 + i], max_new=25)   # 2 pages
+             for i in range(2)]
+    big = Request(2, [9, 10, 11, 12, 13, 14, 15, 16], max_new=38)  # 3 pages
+    for r in small + [big]:
+        router.submit(r)
+    res = router.run(max_ticks=400)
+    assert router.stats["preempted"] >= 1
+    assert sorted(r.req_id for r in res.completed) == [0, 1, 2]
+    assert all(r.outcome == "ok" for r in res.completed)
+    # the victim was the newest admitted (req 1), requeued not dropped,
+    # and preemption cost it no retry budget
+    assert len(router.placements[1]) == 2
+    assert next(r for r in res.completed if r.req_id == 1).retries == 0
+    # single replica, greedy decode: outputs match a fleet that was
+    # never fragmented (reference run with a big enough pool)
+    ref_eng = _engine(params, cfg, num_blocks=8)
+    ref_router = FleetRouter([(ref_eng, "rtx4090")])
+    for r in [Request(i, list(q.prompt), max_new=q.max_new)
+              for i, q in enumerate(small + [big])]:
+        ref_router.submit(r)
+    ref = {r.req_id: list(r.generated) for r in ref_router.run()}
+    assert {r.req_id: list(r.generated) for r in res.completed} == ref
+
+
+# ---------------------------------------------------------------------------
+# Retry budgets + structured outcomes + traces
+# ---------------------------------------------------------------------------
+
+def test_retry_budget_exhausts_to_failed_retries(tiny):
+    """A poisoned request that keeps riding dying replicas stops
+    consuming the fleet after max_retries; everyone else completes."""
+    params, cfg = tiny
+    router = FleetRouter([(_engine(params, cfg), "rtx4090"),
+                          (_engine(params, cfg), "rtx3080")],
+                         standby=[(_engine(params, cfg), "rtx3080")])
+    reqs = _requests(3, cfg)
+    poison = Request(3, [11, 12, 13, 14], max_new=8, max_retries=1)
+    for r in reqs + [poison]:
+        router.submit(r)
+    kills = 0
+    for _ in range(400):
+        router.tick()
+        if kills < 2 and poison.outcome is None:
+            placed = router.placements.get(3, [])
+            if placed:
+                rep = next(r for r in router.replicas
+                           if r.replica_id == placed[-1])
+                if rep.alive and any(a is poison for a in rep.engine.active):
+                    router.fail_replica(rep.replica_id)
+                    kills += 1
+        if not router.outstanding():
+            break
+    res = router.run(max_ticks=400)
+    assert kills == 2
+    assert poison.outcome == "failed_retries" and poison.retries == 2
+    assert [r.req_id for r in res.failed] == [3]
+    assert sorted(r.req_id for r in res.completed) == [0, 1, 2]
+    assert res.outcomes() == {"ok": 3, "failed_retries": 1}
+    tr = res.traces[3]
+    assert tr["outcome"] == "failed_retries" and tr["retries"] == 2
+    assert len(tr["placements"]) == 2
+
+
+def test_deadline_exceeded_outcome(tiny):
+    params, cfg = tiny
+    router = FleetRouter([(_engine(params, cfg), "rtx4090")])
+    for r in _requests(3, cfg, max_new=8):
+        router.submit(r)
+    res = router.run(max_ticks=2)
+    assert res.completed == []
+    assert sorted(r.req_id for r in res.failed) == [0, 1, 2]
+    assert all(r.outcome == "deadline_exceeded" for r in res.failed)
+    # terminal: a second run does not resurrect them
+    res2 = router.run(max_ticks=50)
+    assert res2.completed == [] and len(res2.failed) == 3
+
+
+def test_result_traces_latency(tiny):
+    params, cfg = tiny
+    router = FleetRouter([(_engine(params, cfg), "rtx4090")])
+    for r in _requests(2, cfg, max_new=4):
+        router.submit(r)
+    res = router.run()
+    for rid in (0, 1):
+        tr = res.traces[rid]
+        assert tr["outcome"] == "ok" and tr["generated"] == 4
+        assert tr["latency_ticks"] == tr["finished_tick"] - tr["submitted_tick"]
+        assert tr["latency_ticks"] > 0 and tr["placements"] == [0]
+
+
+# ---------------------------------------------------------------------------
+# Dead standbys are never drafted (fleet level; broker level lives in
+# test_broker_failover.py)
+# ---------------------------------------------------------------------------
+
+def test_dead_standby_never_drafted(tiny):
+    params, cfg = tiny
+    router = FleetRouter(
+        [(_engine(params, cfg), sim_node("rtx4090", reliability=1.0))],
+        standby=[(_engine(params, cfg), sim_node("rtx3080",
+                                                 reliability=0.0))])
+    for r in _requests(2, cfg):
+        router.submit(r)
+    router.tick()
+    dead = router.heartbeat_round()        # the standby dies in round 1
+    assert dead and router.stats["standby_deaths"] == 1
+    assert not router._standby and not router.broker.backup
+    router.fail_replica(0)
+    res = router.run()
+    # with the standby dead there is nothing to draft: requests fail
+    # terminally instead of a corpse being activated
+    assert router.stats["replacements"] == 0
+    assert all(r.outcome == "failed_unservable" for r in res.failed)
+    assert len(res.failed) == 2

@@ -322,12 +322,68 @@ def test_failover_without_standby_absorbs_on_survivors(tiny):
         == [0, 1, 2, 3, 4]
 
 
-def test_fleet_death_raises_instead_of_dropping(tiny):
+def test_fleet_death_returns_structured_failures(tiny):
+    """Killing the whole fleet no longer raises away partial results:
+    run() returns a FleetResult with every request terminally failed
+    (outcome failed_unservable) — strict=True restores the raise."""
     params, cfg = tiny
     router = FleetRouter([(_engine(params, cfg), "rtx4090")])
     for r in _uniform_requests(3, cfg):
         router.submit(r)
     router.tick()
     router.fail_replica(0)
-    with pytest.raises(RuntimeError):
-        router.run()
+    res = router.run()
+    assert len(res.completed) == 0
+    assert sorted(r.req_id for r in res.failed) == [0, 1, 2]
+    assert all(r.outcome == "failed_unservable" for r in res.failed)
+    assert res.outcomes() == {"failed_unservable": 3}
+    assert not res.ok
+
+
+def test_fleet_death_strict_raises(tiny):
+    params, cfg = tiny
+    router = FleetRouter([(_engine(params, cfg), "rtx4090")])
+    for r in _uniform_requests(3, cfg):
+        router.submit(r)
+    router.tick()
+    router.fail_replica(0)
+    with pytest.raises(RuntimeError, match="strict"):
+        router.run(strict=True)
+
+
+def test_fail_replica_unknown_id_and_double_kill(tiny):
+    """fail_replica on an id the fleet never activated raises a
+    descriptive ValueError (not a bare StopIteration); a second kill of
+    the same replica is a no-op, like _on_death already is."""
+    params, cfg = tiny
+    router = FleetRouter([(_engine(params, cfg), "rtx4090"),
+                          (_engine(params, cfg), "rtx3080")],
+                         standby=[(_engine(params, cfg), "rtx3080")])
+    with pytest.raises(ValueError, match="unknown replica id 99"):
+        router.fail_replica(99)
+    # an undrafted standby is not an active replica either
+    with pytest.raises(ValueError, match="standby"):
+        router.fail_replica(2)
+    router.fail_replica(1)
+    failures = router.stats["failures"]
+    router.fail_replica(1)              # no-op, no StopIteration, no raise
+    assert router.stats["failures"] == failures
+
+
+def test_on_death_requeues_direct_engine_submits(tiny):
+    """A request admitted directly via engine.submit() (bypassing the
+    router) has no submission-order entry; a failover drain must not
+    KeyError on it — it joins the order book at drain time."""
+    params, cfg = tiny
+    router = FleetRouter([(_engine(params, cfg), "rtx4090"),
+                          (_engine(params, cfg), "rtx3080")])
+    for r in _uniform_requests(3, cfg):
+        router.submit(r)
+    router.tick()
+    stowaway = Request(req_id=77, prompt=[5, 6, 7], max_new=4)
+    router.replicas[0].engine.submit(stowaway)
+    router.fail_replica(0)              # must not KeyError on req 77
+    assert 77 in {r.req_id for r in router.queue}
+    res = router.run()
+    assert sorted(r.req_id for r in res.completed) == [0, 1, 2, 77]
+    assert all(r.outcome == "ok" for r in res.completed)
