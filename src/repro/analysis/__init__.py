@@ -1,0 +1,33 @@
+"""repro.analysis — static invariant checker for the jit / Pallas /
+allocator planes.
+
+The paper's compatibility story abstracts an intermediate-representation
+plane and an execution plane so heterogeneous consumer devices can run
+the same DAG; a plan that compiles wrong on one peer poisons the whole
+run (FusionLLM, arXiv:2410.12707, makes the same point for
+geo-distributed training).  This repo's equivalents are invariants every
+PR since PR 2 has paid for at runtime — bitwise-deterministic replay,
+donation-safe jitted steps, Pallas BlockSpec/grid consistency, and the
+refcount-paired page lifecycle.  Runtime tests only catch a violation
+they happen to execute; this package checks the SOURCE, at review time,
+before a bad plan ships to a fleet that cannot be single-stepped.
+
+Pure stdlib (``ast``) — no new dependencies.  Entry points:
+
+* ``python -m repro.analysis [--strict] [--only RULE] [--format json]``
+* ``run_analysis(root)`` / ``analyze_source(text, rel)`` for tests.
+
+See ``src/repro/analysis/README.md`` for the rule catalog, suppression
+comments (``# repro-lint: disable=RULE``) and the baseline workflow.
+"""
+from repro.analysis.baseline import (Baseline, BaselineEntry, apply_baseline,
+                                     load_baseline, write_baseline)
+from repro.analysis.core import (DEFAULT_CONFIG, RULES, Finding, Report,
+                                 analyze_source, iter_py_files, repo_root,
+                                 run_analysis)
+
+__all__ = [
+    "Baseline", "BaselineEntry", "DEFAULT_CONFIG", "Finding", "RULES",
+    "Report", "analyze_source", "apply_baseline", "iter_py_files",
+    "load_baseline", "repo_root", "run_analysis", "write_baseline",
+]

@@ -1,0 +1,3 @@
+"""Rule modules register themselves on import (``@register``)."""
+from repro.analysis.rules import (alloc001, det001, hot001, jit001,  # noqa
+                                  pal001)

@@ -1,0 +1,85 @@
+"""DET001 — unseeded nondeterminism in replay-critical code.
+
+Every PR since PR 2 asserts that failover/chaos survivors are
+bitwise-equal to a calm run; the broker's heartbeat process and the
+fault plane are deterministic ONLY because every stochastic decision
+draws from a seeded stream (``np.random.RandomState(seed)``,
+counter-based per-slot PRNG keys).  One module-level ``np.random.*``
+call, one stdlib ``random.*`` draw, or one wall-clock read
+(``time.time()`` / ``datetime.now()``) inside ``core/`` / ``serve/`` /
+``models/`` / ``kernels/`` silently breaks replay for the whole fleet.
+
+Allowed: constructing seeded generators (``RandomState``,
+``default_rng``, ``Generator``, ``SeedSequence``, bit generators) and
+everything under ``jax.random`` (explicit-key API — keys are data, not
+hidden state).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.core import Finding, ModuleContext, Rule, register
+
+SCOPES = ("src/repro/core/", "src/repro/serve/", "src/repro/models/",
+          "src/repro/kernels/")
+
+# numpy.random names that construct SEEDED generators (allowed)
+_SEEDED = {"RandomState", "default_rng", "Generator", "SeedSequence",
+           "BitGenerator", "PCG64", "PCG64DXSM", "Philox", "MT19937",
+           "SFC64"}
+# stdlib random names that construct seedable generators (allowed)
+_RANDOM_OK = {"Random", "SystemRandom", "getstate", "setstate"}
+# wall-clock reads (each one a replay divergence)
+_CLOCKS = {"time.time", "time.time_ns", "time.monotonic",
+           "time.monotonic_ns", "time.perf_counter",
+           "time.perf_counter_ns", "datetime.datetime.now",
+           "datetime.datetime.utcnow", "datetime.datetime.today",
+           "datetime.date.today"}
+
+
+@register
+class Det001(Rule):
+    rule_id = "DET001"
+    title = "unseeded nondeterminism in replay-critical code"
+    motivation = ("bitwise-deterministic replay: PR 4/5/6 failover and "
+                  "chaos benches assert survivors are bitwise-equal to a "
+                  "calm run — one hidden-state draw breaks the assert "
+                  "fleet-wide")
+
+    def check(self, ctx: ModuleContext) -> Iterable[Finding]:
+        if not ctx.rel.startswith(SCOPES):
+            return
+        from repro.analysis.core import dotted_name
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            raw = dotted_name(node.func)
+            # only trust names that actually came through an import —
+            # a local variable that happens to be called `random` is not
+            # the stdlib module
+            if not raw or raw.split(".")[0] not in ctx.imports.names:
+                continue
+            full = ctx.imports.resolve(raw)
+            leaf = full.rsplit(".", 1)[-1]
+            if full.startswith("numpy.random.") and leaf not in _SEEDED:
+                yield self.finding(
+                    ctx, node,
+                    f"module-level numpy.random call `{full}` draws from "
+                    f"hidden global state — use a seeded "
+                    f"np.random.RandomState/default_rng so replay stays "
+                    f"bitwise-deterministic")
+            elif full.startswith("random.") and full.count(".") == 1 \
+                    and leaf not in _RANDOM_OK:
+                yield self.finding(
+                    ctx, node,
+                    f"stdlib `{full}` draws from hidden global state — "
+                    f"use a seeded random.Random(seed) (or numpy "
+                    f"RandomState) so replay stays bitwise-deterministic")
+            elif full in _CLOCKS:
+                yield self.finding(
+                    ctx, node,
+                    f"wall-clock read `{full}()` in replay-critical code "
+                    f"— thread a tick counter / seeded schedule through "
+                    f"instead (calm-vs-fault replay must not depend on "
+                    f"real time)")

@@ -1,0 +1,78 @@
+"""HOT001 — per-element device dispatch inside host-side Python loops.
+
+PR 2's admission-path lesson: one `jnp` op per slot inside a Python
+``for`` costs a dispatch (and on real backends a host→device transfer)
+per iteration, turning an O(1) tick into O(slots).  The fix is always
+the same — assemble operands in numpy inside the loop, convert once
+outside it.  This rule flags ``jnp.*`` calls and ``.at[...].set/add``
+functional updates lexically inside ``for``/``while`` bodies in
+host-side ``serve/`` code (the engine/router/broker plane; jitted
+kernels and traced model code legitimately loop over jnp ops — Python
+loops there unroll at trace time, once).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from repro.analysis.core import (Finding, ModuleContext, Rule, dotted_name,
+                                 register)
+
+SCOPES = ("src/repro/serve/",)
+
+_AT_METHODS = {"set", "add", "multiply", "divide", "power", "min", "max",
+               "get", "apply"}
+
+
+def _is_at_update(node: ast.Call) -> bool:
+    """x.at[idx].set(...) — functional index update on any array."""
+    f = node.func
+    return (isinstance(f, ast.Attribute) and f.attr in _AT_METHODS
+            and isinstance(f.value, ast.Subscript)
+            and isinstance(f.value.value, ast.Attribute)
+            and f.value.value.attr == "at")
+
+
+def _jnp_roots(ctx: ModuleContext) -> List[str]:
+    """Local names bound to jax.numpy (usually just 'jnp')."""
+    return [name for name, full in ctx.imports.names.items()
+            if full in ("jax.numpy", "jnp")]
+
+
+@register
+class Hot001(Rule):
+    rule_id = "HOT001"
+    title = "per-element device dispatch in a host loop"
+    motivation = ("PR 2 decode-path optimisation: per-slot jnp ops in the "
+                  "admission loop made tick cost O(slots); batching to "
+                  "one conversion per tick was the whole win")
+
+    def check(self, ctx: ModuleContext) -> Iterable[Finding]:
+        if not ctx.rel.startswith(SCOPES):
+            return
+        roots = _jnp_roots(ctx)
+        # walk loops at module+function level; anything lexically inside
+        # a for/while body is host-loop code in serve/ (no tracing there)
+        for loop in ast.walk(ctx.tree):
+            if not isinstance(loop, (ast.For, ast.AsyncFor, ast.While)):
+                continue
+            for node in ast.walk(loop):
+                if node is loop or not isinstance(node, ast.Call):
+                    continue
+                name = dotted_name(node.func)
+                if name and roots and name.split(".")[0] in roots:
+                    yield self.finding(
+                        ctx, node,
+                        f"`{name}(...)` inside a host-side Python loop "
+                        f"dispatches one device op per iteration — build "
+                        f"the operand in numpy inside the loop and "
+                        f"convert once after it (PR 2 O(slots) tick "
+                        f"regression)")
+                elif _is_at_update(node):
+                    yield self.finding(
+                        ctx, node,
+                        "`.at[...]."
+                        f"{node.func.attr}(...)` inside a host-side "
+                        "Python loop copies the whole array per "
+                        "iteration — accumulate indices/values and apply "
+                        "one batched update after the loop")

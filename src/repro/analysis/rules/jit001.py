@@ -1,0 +1,285 @@
+"""JIT001 — read of a donated buffer before rebinding.
+
+``jax.jit(..., donate_argnums=...)`` invalidates the caller's reference:
+on accelerator backends the buffer is reused for the output, so a later
+read of the SAME Python name returns garbage (or raises) — but only off
+CPU, which is exactly why runtime tests on this container never catch
+it.  The engine's tick/admit path donates the cache and seen-mask
+pytrees into every jitted step (``serve/engine.py``); the invariant is
+that a name passed in a donated position is DEAD until rebound, and the
+step's own result assignment is the only thing that revives it.
+
+The pass is intra-function and deliberately simple: it resolves
+``jax.jit`` bindings (direct ``donate_argnums=`` kwargs, ``**kw`` dicts
+built with ``dict(donate_argnums=...)`` anywhere in the module — the
+engine's conditional ``dn = dict(...) if donate else {}`` pattern counts
+as donating, because it DOES donate on the backends that matter — and
+``@partial(jax.jit, donate_argnums=...)`` decorators), then walks each
+function body in source order tracking consumed names.  Branches union
+(a name possibly donated on SOME path is unsafe), loop bodies get a
+second pass so a consume at the bottom of a loop poisons a read at the
+top (the tick-loop hazard class).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.core import (Finding, ModuleContext, Rule, dotted_name,
+                                 register)
+
+_JIT_NAMES = {"jax.jit", "jax.api.jit", "jax.pjit", "jax.experimental.pjit"}
+
+
+def _donate_positions(call: ast.Call, module: ast.Module) -> Set[int]:
+    """Donated argnums of a jit(...) call node, following ``**name``
+    kwargs to ``name = dict(donate_argnums=...)`` assignments anywhere
+    in the module (conditional dicts count — they donate on accelerator
+    backends)."""
+    out: Set[int] = set()
+
+    def from_value(value: ast.AST) -> None:
+        if isinstance(value, ast.Constant) and isinstance(value.value, int):
+            out.add(value.value)
+        elif isinstance(value, (ast.Tuple, ast.List)):
+            for el in value.elts:
+                if isinstance(el, ast.Constant) \
+                        and isinstance(el.value, int):
+                    out.add(el.value)
+
+    def scan_kwargs(kwargs) -> None:
+        for kw in kwargs:
+            if kw.arg == "donate_argnums":
+                from_value(kw.value)
+            elif kw.arg is None and isinstance(kw.value, ast.Name):
+                # **dn — find dict(donate_argnums=...) assigned to dn
+                for node in ast.walk(module):
+                    if isinstance(node, ast.Assign) and any(
+                            isinstance(t, ast.Name)
+                            and t.id == kw.value.id
+                            for t in node.targets):
+                        for sub in ast.walk(node.value):
+                            if isinstance(sub, ast.Call) \
+                                    and isinstance(sub.func, ast.Name) \
+                                    and sub.func.id == "dict":
+                                scan_kwargs(sub.keywords)
+
+    scan_kwargs(call.keywords)
+    return out
+
+
+def _jit_call(node: ast.AST, ctx: ModuleContext) -> Optional[ast.Call]:
+    """The jit(...) Call if ``node`` is one (directly or via
+    functools.partial(jax.jit, ...))."""
+    if not isinstance(node, ast.Call):
+        return None
+    full = ctx.resolve(node.func)
+    if full in _JIT_NAMES:
+        return node
+    if full in ("functools.partial", "partial") and node.args:
+        inner = ctx.resolve(node.args[0])
+        if inner in _JIT_NAMES:
+            return node
+    return None
+
+
+def _collect_donating(ctx: ModuleContext) -> Dict[str, Set[int]]:
+    """Dotted callable name -> donated positions, module-wide.  Covers
+    ``self._step = jax.jit(f, donate_argnums=...)`` assignments and
+    ``@partial(jax.jit, donate_argnums=...)`` decorated defs."""
+    table: Dict[str, Set[int]] = {}
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Assign):
+            call = _jit_call(node.value, ctx)
+            if call is None:
+                continue
+            pos = _donate_positions(call, ctx.tree)
+            if not pos:
+                continue
+            for t in node.targets:
+                name = dotted_name(t)
+                if name:
+                    table[name] = pos
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                call = _jit_call(dec, ctx)
+                if call is not None:
+                    pos = _donate_positions(call, ctx.tree)
+                    if pos:
+                        table[node.name] = pos
+    return table
+
+
+def _reads(node: ast.AST) -> List[Tuple[str, ast.AST]]:
+    """All dotted names loaded in an expression/statement (longest
+    attribute chains only)."""
+    out: List[Tuple[str, ast.AST]] = []
+    for sub in ast.walk(node):
+        if isinstance(sub, (ast.Name, ast.Attribute)) \
+                and isinstance(getattr(sub, "ctx", None), ast.Load):
+            name = dotted_name(sub)
+            if name:
+                out.append((name, sub))
+    # keep only maximal chains (self.caches.shape reported once, and a
+    # prefix match against consumed names still catches self.caches)
+    maximal = []
+    names = [n for n, _ in out]
+    for name, sub in out:
+        if not any(other != name and other.startswith(name + ".")
+                   for other in names):
+            maximal.append((name, sub))
+    return maximal
+
+
+def _touches(read: str, consumed: str) -> bool:
+    return read == consumed or read.startswith(consumed + ".")
+
+
+class _Scope:
+    """Linear walk of one function body tracking donated-and-dead
+    names: dotted name -> line where it was consumed."""
+
+    def __init__(self, rule: "Jit001", ctx: ModuleContext,
+                 donating: Dict[str, Set[int]]):
+        self.rule = rule
+        self.ctx = ctx
+        self.donating = donating
+        self.findings: List[Finding] = []
+        self._seen: Set[Tuple[int, int, str]] = set()
+
+    # -- helpers ---------------------------------------------------------
+
+    def _flag(self, node: ast.AST, name: str, consumed_line: int) -> None:
+        key = (node.lineno, node.col_offset, name)
+        if key in self._seen:
+            return
+        self._seen.add(key)
+        self.findings.append(self.rule.finding(
+            self.ctx, node,
+            f"`{name}` was passed in a donated position on line "
+            f"{consumed_line} and read again before rebinding — the "
+            f"buffer is dead after the jitted call (off-CPU this reads "
+            f"freed memory); rebind it from the call's result first"))
+
+    def _check_reads(self, node: ast.AST, consumed: Dict[str, int]) -> None:
+        if not consumed:
+            return
+        for name, sub in _reads(node):
+            for dead, line in consumed.items():
+                if _touches(name, dead):
+                    self._flag(sub, dead, line)
+
+    def _consume(self, node: ast.AST, consumed: Dict[str, int]) -> None:
+        """Mark donated args of any donating call inside ``node``."""
+        for sub in ast.walk(node):
+            if not isinstance(sub, ast.Call):
+                continue
+            callee = dotted_name(sub.func)
+            pos = self.donating.get(callee or "")
+            if not pos:
+                continue
+            for i, arg in enumerate(sub.args):
+                if i in pos:
+                    name = dotted_name(arg)
+                    if name:
+                        consumed[name] = sub.lineno
+
+    def _rebind(self, target: ast.AST, consumed: Dict[str, int]) -> None:
+        for sub in ast.walk(target):
+            if isinstance(sub, (ast.Name, ast.Attribute)):
+                name = dotted_name(sub)
+                if name:
+                    for dead in [d for d in consumed
+                                 if _touches(d, name) or _touches(name, d)]:
+                        del consumed[dead]
+
+    # -- statement walk --------------------------------------------------
+
+    def walk(self, stmts, consumed: Dict[str, int]) -> Dict[str, int]:
+        for stmt in stmts:
+            consumed = self._stmt(stmt, consumed)
+        return consumed
+
+    def _stmt(self, stmt: ast.stmt, consumed: Dict[str, int]
+              ) -> Dict[str, int]:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return consumed                    # separate scope
+        if isinstance(stmt, ast.Assign):
+            self._check_reads(stmt.value, consumed)
+            self._consume(stmt.value, consumed)
+            for t in stmt.targets:
+                self._rebind(t, consumed)
+            return consumed
+        if isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+            if stmt.value is not None:
+                self._check_reads(stmt.value, consumed)
+                self._consume(stmt.value, consumed)
+            if isinstance(stmt, ast.AugAssign):
+                self._check_reads(stmt.target, consumed)
+            self._rebind(stmt.target, consumed)
+            return consumed
+        if isinstance(stmt, ast.If):
+            self._check_reads(stmt.test, consumed)
+            self._consume(stmt.test, consumed)
+            a = self.walk(stmt.body, dict(consumed))
+            b = self.walk(stmt.orelse, dict(consumed))
+            return {**b, **a}                  # may-be-donated union
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._check_reads(stmt.iter, consumed)
+            self._consume(stmt.iter, consumed)
+            self._rebind(stmt.target, consumed)
+            once = self.walk(stmt.body, dict(consumed))
+            # second pass: a consume at the bottom of the body reaches a
+            # read at the top on the next iteration
+            twice = self.walk(stmt.body, dict(once))
+            out = {**consumed, **once, **twice}
+            return self.walk(stmt.orelse, out)
+        if isinstance(stmt, ast.While):
+            self._check_reads(stmt.test, consumed)
+            once = self.walk(stmt.body, dict(consumed))
+            self._check_reads(stmt.test, once)
+            twice = self.walk(stmt.body, dict(once))
+            out = {**consumed, **once, **twice}
+            return self.walk(stmt.orelse, out)
+        if isinstance(stmt, ast.With):
+            for item in stmt.items:
+                self._check_reads(item.context_expr, consumed)
+                self._consume(item.context_expr, consumed)
+                if item.optional_vars is not None:
+                    self._rebind(item.optional_vars, consumed)
+            return self.walk(stmt.body, consumed)
+        if isinstance(stmt, ast.Try):
+            consumed = self.walk(stmt.body, consumed)
+            for h in stmt.handlers:
+                consumed = self.walk(h.body, dict(consumed))
+            consumed = self.walk(stmt.orelse, consumed)
+            return self.walk(stmt.finalbody, consumed)
+        if isinstance(stmt, ast.Delete):
+            for t in stmt.targets:
+                self._rebind(t, consumed)
+            return consumed
+        # Expr / Return / Assert / Raise / ...
+        self._check_reads(stmt, consumed)
+        self._consume(stmt, consumed)
+        return consumed
+
+
+@register
+class Jit001(Rule):
+    rule_id = "JIT001"
+    title = "donated buffer read before rebinding"
+    motivation = ("PR 1 donation of the slot-cache pytree into "
+                  "make_engine_step: a stale read after the donated tick "
+                  "call is invisible on this CPU container (donation is "
+                  "a no-op there) and corrupts memory on every real "
+                  "accelerator")
+
+    def check(self, ctx: ModuleContext) -> Iterable[Finding]:
+        donating = _collect_donating(ctx)
+        if not donating:
+            return
+        for fn in ctx.functions():
+            scope = _Scope(self, ctx, donating)
+            scope.walk(fn.body, {})
+            yield from scope.findings

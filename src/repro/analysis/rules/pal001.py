@@ -1,0 +1,426 @@
+"""PAL001 — Pallas grid/BlockSpec consistency; PAL002 — cost-plan drift.
+
+A Pallas kernel has three descriptions of the same layout that nothing
+type-checks against each other: the grid, the BlockSpec index_maps
+(whose arity must be grid rank + scalar-prefetch count, and whose
+return tuple must have one coordinate per block dimension), and the
+block shapes (whose summed per-step footprint must fit VMEM —
+~16 MB/core, and double-buffering halves what a kernel may plan on).
+Mosaic reports mismatches as late compile errors on TPU only; on this
+CPU container interpret mode happily runs a wrong index_map.  PAL001
+checks each ``pl.pallas_call`` / ``pltpu.PrefetchScalarGridSpec`` site
+statically and stays silent whenever a piece is not statically visible
+(specs passed through a variable built elsewhere, runtime-computed
+shapes) — no false positives on dynamic code, by construction.
+
+PAL002 covers the one site PAL001 must skip: a hand-built
+``cost_estimate`` next to specs produced by a helper.  The advertised
+DMA bytes (CostEstimate.bytes_accessed) steer the paper's
+cost-model-driven placement, so the cost must be DERIVED from the same
+plan the blocks are built from (``paged_attention._spec_plan`` is the
+repo's one-source-of-truth idiom).  The rule resolves the local
+function that produced ``in_specs`` and requires the ``cost_estimate``
+expression to transitively call it; a literal/disconnected cost next
+to helper-built specs is exactly the drift the PR 3→5 cost-model
+regressions came from.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.core import (Finding, ModuleContext, Rule, const_int,
+                                 const_int_tuple, dotted_name, register)
+
+_PALLAS_CALL = {"jax.experimental.pallas.pallas_call", "pallas.pallas_call",
+                "pl.pallas_call"}
+_GRID_SPEC = {"jax.experimental.pallas.tpu.PrefetchScalarGridSpec",
+              "pltpu.PrefetchScalarGridSpec"}
+_BLOCK_SPEC = {"jax.experimental.pallas.BlockSpec", "pallas.BlockSpec",
+               "pl.BlockSpec"}
+
+
+def _is_call_to(ctx: ModuleContext, node: ast.AST, names: Set[str]
+                ) -> bool:
+    """Leaf-name match so any Pallas import alias works (`import
+    jax.experimental.pallas as pl` resolves the head only)."""
+    if not isinstance(node, ast.Call):
+        return False
+    full = ctx.resolve(node.func)
+    if not full:
+        return False
+    leaf = full.split(".")[-1]
+    return full in names or leaf in {n.split(".")[-1] for n in names}
+
+
+def _kwarg(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _local_env(ctx: ModuleContext, scope: Optional[ast.AST]
+               ) -> Dict[str, int]:
+    """Module int constants + simple ``name = <int expr>`` assignments in
+    the enclosing function (best effort; last write wins)."""
+    env = dict(ctx.module_ints)
+    if scope is not None:
+        for node in ast.walk(scope):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                v = const_int(node.value, env)
+                if v is not None:
+                    env[node.targets[0].id] = v
+    return env
+
+
+def _index_fn(scope: Optional[ast.AST], node: ast.AST
+              ) -> Optional[Tuple[int, Optional[int]]]:
+    """(arity, return_rank) of a BlockSpec index_map expression —
+    a lambda inline, or a Name bound to a local def/lambda in ``scope``.
+    None when the function is not statically visible."""
+    if isinstance(node, ast.Lambda):
+        arity = len(node.args.posonlyargs) + len(node.args.args)
+        rank = len(node.body.elts) \
+            if isinstance(node.body, ast.Tuple) else None
+        return arity, rank
+    if isinstance(node, ast.Name) and scope is not None:
+        for sub in ast.walk(scope):
+            if isinstance(sub, ast.FunctionDef) and sub.name == node.id:
+                arity = len(sub.args.posonlyargs) + len(sub.args.args)
+                ranks = {len(r.value.elts) for r in ast.walk(sub)
+                         if isinstance(r, ast.Return)
+                         and isinstance(r.value, ast.Tuple)}
+                return arity, ranks.pop() if len(ranks) == 1 else None
+            if isinstance(sub, ast.Assign) \
+                    and isinstance(sub.value, ast.Lambda) \
+                    and any(isinstance(t, ast.Name) and t.id == node.id
+                            for t in sub.targets):
+                return _index_fn(scope, sub.value)
+    return None
+
+
+def _spec_exprs(node: Optional[ast.AST]) -> List[ast.AST]:
+    if node is None:
+        return []
+    if isinstance(node, (ast.List, ast.Tuple)):
+        return list(node.elts)
+    return [node]
+
+
+class _Site:
+    """One statically-analyzable pallas_call / PrefetchScalarGridSpec:
+    grid rank, scalar-prefetch count, and the visible BlockSpec exprs."""
+
+    def __init__(self, call: ast.Call, scope: Optional[ast.AST],
+                 ctx: ModuleContext):
+        self.call = call
+        self.scope = scope
+        self.grid_rank: Optional[int] = None
+        self.prefetch = 0
+        self.specs: List[ast.Call] = []      # visible pl.BlockSpec calls
+        self.out_rank: Optional[int] = None  # rank of out_shape, if visible
+
+        grid = _kwarg(call, "grid")
+        spec_nodes = _spec_exprs(_kwarg(call, "in_specs")) \
+            + _spec_exprs(_kwarg(call, "out_specs")) \
+            + _spec_exprs(_kwarg(call, "out_spec"))
+
+        gs = _kwarg(call, "grid_spec")
+        if gs is not None:
+            inner = self._resolve_grid_spec(gs, scope, ctx)
+            if inner is not None:
+                grid = _kwarg(inner, "grid")
+                np_ = _kwarg(inner, "num_scalar_prefetch")
+                if isinstance(np_, ast.Constant) \
+                        and isinstance(np_.value, int):
+                    self.prefetch = np_.value
+                spec_nodes += _spec_exprs(_kwarg(inner, "in_specs")) \
+                    + _spec_exprs(_kwarg(inner, "out_specs"))
+        elif _is_call_to(ctx, call, _GRID_SPEC):
+            np_ = _kwarg(call, "num_scalar_prefetch")
+            if isinstance(np_, ast.Constant) and isinstance(np_.value, int):
+                self.prefetch = np_.value
+
+        if isinstance(grid, (ast.Tuple, ast.List)):
+            self.grid_rank = len(grid.elts)
+
+        out_shape = _kwarg(call, "out_shape")
+        if isinstance(out_shape, ast.Call):
+            full = ctx.resolve(out_shape.func) or ""
+            if full.split(".")[-1] == "ShapeDtypeStruct" and out_shape.args:
+                shp = out_shape.args[0]
+                if isinstance(shp, (ast.Tuple, ast.List)):
+                    self.out_rank = len(shp.elts)
+
+        self.specs = [s for s in spec_nodes
+                      if _is_call_to(ctx, s, _BLOCK_SPEC)]
+        self.out_specs = [s for s in
+                          _spec_exprs(_kwarg(call, "out_specs"))
+                          + _spec_exprs(_kwarg(call, "out_spec"))
+                          if _is_call_to(ctx, s, _BLOCK_SPEC)]
+
+    @staticmethod
+    def _resolve_grid_spec(node: ast.AST, scope: Optional[ast.AST],
+                           ctx: ModuleContext) -> Optional[ast.Call]:
+        if _is_call_to(ctx, node, _GRID_SPEC):
+            return node
+        if isinstance(node, ast.Name) and scope is not None:
+            for sub in ast.walk(scope):
+                if isinstance(sub, ast.Assign) \
+                        and any(isinstance(t, ast.Name) and t.id == node.id
+                                for t in sub.targets) \
+                        and _is_call_to(ctx, sub.value, _GRID_SPEC):
+                    return sub.value
+        return None
+
+
+def _enclosing_function(tree: ast.Module, node: ast.AST
+                        ) -> Optional[ast.AST]:
+    best = None
+    for fn in ast.walk(tree):
+        if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and fn.lineno <= node.lineno <= getattr(
+                    fn, "end_lineno", fn.lineno):
+            if best is None or fn.lineno >= best.lineno:
+                best = fn
+    return best
+
+
+@register
+class Pal001(Rule):
+    rule_id = "PAL001"
+    title = "Pallas grid/BlockSpec inconsistency"
+    motivation = ("PR 3 Mosaic port: index_map arity and block-rank "
+                  "mismatches are late TPU-only compile errors, and an "
+                  "over-budget per-step block set OOMs VMEM on hardware "
+                  "the CPU interpret tests never touch")
+
+    def check(self, ctx: ModuleContext) -> Iterable[Finding]:
+        calls = [n for n in ast.walk(ctx.tree) if isinstance(n, ast.Call)]
+        # grid-spec constructors consumed by a visible pallas_call are
+        # analyzed through that site — don't double-report them
+        consumed_specs = set()
+        for node in calls:
+            if not _is_call_to(ctx, node, _PALLAS_CALL):
+                continue
+            gs = _kwarg(node, "grid_spec")
+            if gs is not None:
+                inner = _Site._resolve_grid_spec(
+                    gs, _enclosing_function(ctx.tree, node), ctx)
+                if inner is not None:
+                    consumed_specs.add(id(inner))
+        for node in calls:
+            is_pc = _is_call_to(ctx, node, _PALLAS_CALL)
+            if not is_pc and not (_is_call_to(ctx, node, _GRID_SPEC)
+                                  and id(node) not in consumed_specs):
+                continue
+            scope = _enclosing_function(ctx.tree, node)
+            site = _Site(node, scope, ctx)
+            yield from self._check_site(ctx, site)
+
+    def _check_site(self, ctx: ModuleContext, site: _Site
+                    ) -> Iterable[Finding]:
+        env = _local_env(ctx, site.scope)
+        want_arity = None
+        if site.grid_rank is not None:
+            want_arity = site.grid_rank + site.prefetch
+
+        vmem_total, vmem_complete = 0, bool(site.specs)
+        itemsize = ctx.config["default_itemsize"]
+        for spec in site.specs:
+            shape = spec.args[0] if spec.args else _kwarg(spec, "block_shape")
+            idx = spec.args[1] if len(spec.args) > 1 \
+                else _kwarg(spec, "index_map")
+            rank = len(shape.elts) \
+                if isinstance(shape, (ast.Tuple, ast.List)) else None
+
+            info = _index_fn(site.scope, idx) if idx is not None else None
+            if info is not None and want_arity is not None \
+                    and info[0] != want_arity:
+                yield self.finding(
+                    ctx, spec,
+                    f"BlockSpec index_map takes {info[0]} arg(s) but the "
+                    f"grid supplies {want_arity} (grid rank "
+                    f"{site.grid_rank} + {site.prefetch} scalar-prefetch "
+                    f"ref(s)) — Mosaic rejects this at TPU compile time "
+                    f"only")
+            if info is not None and rank is not None \
+                    and info[1] is not None and info[1] != rank:
+                yield self.finding(
+                    ctx, spec,
+                    f"BlockSpec block_shape has rank {rank} but its "
+                    f"index_map returns {info[1]} coordinate(s) — one "
+                    f"block coordinate per block dimension")
+
+            folded = const_int_tuple(shape, env) \
+                if isinstance(shape, (ast.Tuple, ast.List)) else None
+            if folded is None:
+                vmem_complete = False
+            else:
+                n = 1
+                for d in folded:
+                    n *= d
+                vmem_total += n * itemsize
+
+        if site.out_rank is not None:
+            for spec in site.out_specs:
+                shape = spec.args[0] if spec.args \
+                    else _kwarg(spec, "block_shape")
+                if isinstance(shape, (ast.Tuple, ast.List)) \
+                        and len(shape.elts) != site.out_rank:
+                    yield self.finding(
+                        ctx, spec,
+                        f"out_specs block_shape rank {len(shape.elts)} != "
+                        f"out_shape rank {site.out_rank}")
+
+        budget = ctx.config["vmem_budget"]
+        if vmem_complete and vmem_total > budget:
+            yield self.finding(
+                ctx, site.call,
+                f"per-grid-step block footprint {vmem_total} bytes "
+                f"exceeds the VMEM budget {budget} (≈16 MB/core minus "
+                f"double-buffering headroom) — shrink block shapes or "
+                f"raise --vmem-budget deliberately")
+
+
+# ---------------------------------------------------------------------------
+# PAL002 — cost_estimate provenance
+# ---------------------------------------------------------------------------
+
+def _local_call_graph(tree: ast.Module) -> Dict[str, Set[str]]:
+    """name -> module-local function names it calls (one level)."""
+    local = {n.name for n in ast.walk(tree)
+             if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    graph: Dict[str, Set[str]] = {}
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        calls = set()
+        for sub in ast.walk(fn):
+            if isinstance(sub, ast.Call):
+                name = dotted_name(sub.func)
+                if name in local:
+                    calls.add(name)
+        graph[fn.name] = calls
+    return graph
+
+
+def _transitive(graph: Dict[str, Set[str]], roots: Set[str]) -> Set[str]:
+    seen, todo = set(roots), list(roots)
+    while todo:
+        for nxt in graph.get(todo.pop(), ()):
+            if nxt not in seen:
+                seen.add(nxt)
+                todo.append(nxt)
+    return seen
+
+
+def _producer(scope: Optional[ast.AST], node: Optional[ast.AST],
+              local: Set[str]) -> Optional[Tuple[str, Set[str]]]:
+    """For an expression (or Name assigned in ``scope``): the set of
+    module-local functions called in it.  Returns (kind, names) where
+    kind is 'call' when at least one local call is present, 'literal'
+    when the value is fully visible with NO local calls, None when the
+    value's origin is not visible (parameter, import, attribute)."""
+    if node is None or scope is None:
+        return None
+    if isinstance(node, ast.Name):
+        target = None
+        for sub in ast.walk(scope):
+            if isinstance(sub, ast.Assign):
+                names = []
+                for t in sub.targets:
+                    names.extend(
+                        n.id for n in ast.walk(t)
+                        if isinstance(n, ast.Name))
+                if node.id in names:
+                    target = sub.value
+        if target is None:
+            return None                       # parameter / nonlocal
+        node = target
+    calls = {dotted_name(sub.func) for sub in ast.walk(node)
+             if isinstance(sub, ast.Call)}
+    local_calls = {c for c in calls if c in local}
+    if local_calls:
+        return ("call", local_calls)
+    # only call it a literal when no opaque (non-local) calls other than
+    # plain constructors are involved — pl.CostEstimate(1, 2, 3) counts
+    opaque = {c for c in calls
+              if c and not c.endswith("CostEstimate") and c not in local}
+    if opaque:
+        return None
+    return ("literal", set())
+
+
+@register
+class Pal002(Rule):
+    rule_id = "PAL002"
+    title = "cost_estimate not derived from the spec plan"
+    motivation = ("paged_attention's one-source-of-truth fix: the "
+                  "advertised CostEstimate.bytes_accessed steers "
+                  "cost-model placement, so a cost built apart from the "
+                  "BlockSpec plan silently drifts the moment a block "
+                  "shape changes")
+
+    def check(self, ctx: ModuleContext) -> Iterable[Finding]:
+        local = {n.name for n in ast.walk(ctx.tree)
+                 if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        graph = _local_call_graph(ctx.tree)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call) \
+                    or not _is_call_to(ctx, node, _PALLAS_CALL):
+                continue
+            cost = _kwarg(node, "cost_estimate")
+            if cost is None:
+                continue
+            scope = _enclosing_function(ctx.tree, node)
+            # which local helper produced the specs?
+            spec_src = self._spec_producer(ctx, node, scope, local)
+            if spec_src is None:
+                continue                       # specs inline or opaque
+            cost_src = _producer(scope, cost, local)
+            if cost_src is None:
+                continue                       # cost origin not visible
+            kind, cost_calls = cost_src
+            reach = _transitive(graph, cost_calls)
+            if spec_src in reach:
+                continue                       # derived from the plan
+            yield self.finding(
+                ctx, cost,
+                f"cost_estimate is "
+                f"{'a literal' if kind == 'literal' else 'built from ' + ', '.join(sorted(cost_calls))} "
+                f"but in_specs come from `{spec_src}(...)` — derive the "
+                f"cost by calling the same plan helper so bytes_accessed "
+                f"cannot drift from the BlockSpecs")
+
+    @staticmethod
+    def _spec_producer(ctx: ModuleContext, call: ast.Call,
+                       scope: Optional[ast.AST],
+                       local: Set[str]) -> Optional[str]:
+        """The module-local function whose (possibly tuple-unpacked)
+        result supplies in_specs — via the call's in_specs kwarg or its
+        grid_spec's."""
+        node = _kwarg(call, "in_specs")
+        if node is None:
+            gs = _Site._resolve_grid_spec(
+                _kwarg(call, "grid_spec"), scope, ctx) \
+                if _kwarg(call, "grid_spec") is not None else None
+            if gs is not None:
+                node = _kwarg(gs, "in_specs")
+        if not isinstance(node, ast.Name) or scope is None:
+            return None
+        for sub in ast.walk(scope):
+            if not isinstance(sub, ast.Assign) \
+                    or not isinstance(sub.value, ast.Call):
+                continue
+            names = []
+            for t in sub.targets:
+                names.extend(n.id for n in ast.walk(t)
+                             if isinstance(n, ast.Name))
+            if node.id in names:
+                fname = dotted_name(sub.value.func)
+                if fname in local:
+                    return fname
+        return None

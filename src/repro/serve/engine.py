@@ -202,7 +202,9 @@ def generate(params, cfg: ModelConfig, prompts: Array, *, max_new: int,
         if t == max_new - 1:
             break
         key, sub = jax.random.split(key)
-        posd = jnp.full((B, 1), S0 + t, jnp.int32)
+        # np, not jnp: a device op here would dispatch once per decoded
+        # token (HOT001); decode() converts the operand batch once
+        posd = np.full((B, 1), S0 + t, np.int32)
         logits, caches = decode(params, caches, {"tokens": tok}, posd)
         tok = sample(logits, sub, temperature)
     return jnp.concatenate(out, axis=1)

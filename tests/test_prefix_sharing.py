@@ -64,7 +64,7 @@ def test_allocator_refcount_share_and_free():
     assert a.free([b0]) == [b0]        # 1 -> 0: physically freed NOW
     assert b0 in a._free
     with pytest.raises(AssertionError, match="double free"):
-        a.free([b0])
+        a.free([b0])  # repro-lint: disable=ALLOC001 (raises; no return)
     with pytest.raises(AssertionError, match="share of unheld"):
         a.share(b0)
 
