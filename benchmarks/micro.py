@@ -10,8 +10,10 @@ cache memory, per-tick HBM bytes kernel vs gather, the broker-routed
 + fleet-vs-single-engine throughput, and the ``prefix`` section:
 prefix-sharing admission-call/concurrency wins at equal pool memory);
 ``chaos_bench`` (its own CI step, ``--only chaos``) merges the ``chaos``
-degraded-mode fault-tolerance section into the same file — CI uploads
-it as an artifact so the trajectory accumulates across PRs."""
+degraded-mode fault-tolerance section into the same file, and
+``migration_bench`` (``--only migration``) the ``migration``
+stateful-failover section — CI uploads it as an artifact so the
+trajectory accumulates across PRs."""
 from __future__ import annotations
 
 import json
@@ -641,9 +643,11 @@ def chaos_bench(summary: Optional[dict] = None) -> List[dict]:
         # after the partition, terminal outcome ok
         assert router.placements[rid] == frozen_pl[rid]
         assert res.traces[rid]["outcome"] == "ok"
-    # every admission on the partitioned engine is accounted for by
-    # exactly one router placement -> heal never re-prefilled
-    assert part_rep.engine.stats["admitted"] == sum(
+    # every arrival on the partitioned engine — prompt admission or
+    # migrated import — is accounted for by exactly one router
+    # placement -> heal never re-prefilled
+    assert (part_rep.engine.stats["admitted"]
+            + part_rep.engine.stats["imported"]) == sum(
         pl.count(part_rep.replica_id)
         for pl in router.placements.values())
     assert st["partitions"] == 1 and st["partition_heals"] == 1
@@ -685,6 +689,173 @@ def chaos_bench(summary: Optional[dict] = None) -> List[dict]:
             {"name": "chaos/goodput_vs_calm",
              "us_per_call": calm_s / max(1, calm_ticks) * 1e6,
              "derived": f"{goodput_chaos / goodput_calm:.2f}x_tok_per_tick"}]
+
+
+def migration_bench(summary: Optional[dict] = None) -> List[dict]:
+    """Stateful failover (ISSUE 10 acceptance bench): verified KV page
+    migration and router decode-state snapshots, so faults stop costing
+    re-prefill.
+
+    Asserted: (a) soft-drain AND load-rebalance recover mid-decode with
+    ZERO re-prefilled tokens — every request is prompt-admitted exactly
+    once fleet-wide, migrated arrivals attach via ``import_state``, and
+    no victim pays a retry; (b) a crash with router snapshots enabled
+    re-decodes only the tokens generated since the last snapshot — the
+    engines' ``resumed_tokens`` equals the total snapshot length at the
+    kill; (c) a ``corrupt``-faulted transfer is rejected by the
+    chained-crc32 verification and falls back to requeue-from-prompt,
+    the victims still completing bitwise-identical to a no-fault run.
+    Standalone runs merge the ``migration`` section into
+    ``BENCH_engine.json`` (CI runs ``--only migration``)."""
+    import dataclasses
+
+    from repro.configs import get_smoke_config
+    from repro.models.transformer import init_params
+    from repro.serve.engine import Request, ServingEngine
+    from repro.serve.faults import Fault, FaultPlan
+    from repro.serve.router import FleetRouter
+
+    standalone = summary is None
+    if standalone:
+        summary = {}
+        if os.path.exists(BENCH_JSON):
+            with open(BENCH_JSON) as f:
+                summary = json.load(f)
+    cfg = dataclasses.replace(get_smoke_config("gpt3-24l"), vocab_size=128,
+                              d_model=128, d_ff=256, n_heads=4, n_kv_heads=4,
+                              head_dim=32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    n_req = 3
+
+    def eng(cache_len=64):
+        return ServingEngine(params, cfg, slots=4, cache_len=cache_len,
+                             chunk=8, paged=True, page_size=16)
+
+    def reqs(max_new=16):
+        return [Request(i, [3 + i] * 20, max_new=max_new)
+                for i in range(n_req)]
+
+    def admitted(router):
+        return sum(r.engine.stats["admitted"] for r in router.replicas)
+
+    def retries_total(res):
+        return sum(tr["retries"] for tr in res.traces.values())
+
+    # --- no-fault reference (shared by every scenario) ----------------
+    ref_router = FleetRouter([(eng(), "rtx4090"), (eng(), "rtx3080")])
+    for r in reqs():
+        ref_router.submit(r)
+    ref = ref_router.run()
+    assert ref.ok and len(ref.completed) == n_req
+    ref_out = {r.req_id: list(r.generated) for r in ref.completed}
+
+    # --- (a1) soft-drain migrates mid-decode: zero re-prefill ---------
+    plan = FaultPlan([Fault(2, 0, "straggle", factor=8.0, duration=10)])
+    router = FleetRouter([(eng(), "rtx4090"), (eng(), "rtx3080")],
+                         fault_plan=plan)
+    for r in reqs():
+        router.submit(r)
+    t0 = time.perf_counter()
+    res = router.run(max_ticks=300)
+    drain_s = time.perf_counter() - t0
+    drain_ticks = res.ticks
+    assert router.stats["soft_drains"] >= 1
+    drain_migr = router.stats["migrations"]
+    assert drain_migr >= 1, "soft-drain must migrate with free peer slots"
+    # zero re-prefilled tokens: each request prompt-admitted exactly
+    # once across the whole fleet, and migration cost no retry budget
+    assert admitted(router) == n_req, \
+        f"re-prefill happened: {admitted(router)} admissions for {n_req}"
+    assert retries_total(res) == 0
+    for r in res.completed:
+        assert list(r.generated) == ref_out[r.req_id], \
+            f"migration changed greedy output of req {r.req_id}"
+
+    # --- (a2) load-rebalance migrates the newest off the hot replica --
+    e0, e1 = eng(), eng()
+    router = FleetRouter([(e0, "rtx4090"), (e1, "rtx4090")],
+                         rebalance_every=2, rebalance_factor=1.5)
+    for r in reqs():
+        e0.submit(r)                       # skew: all load on replica 0
+    res = router.run(max_ticks=400)
+    rebalances = router.stats["rebalances"]
+    assert rebalances >= 1, "skewed load must trigger a rebalance"
+    assert admitted(router) == n_req and retries_total(res) == 0
+    for r in res.completed:
+        assert list(r.generated) == ref_out[r.req_id]
+
+    # --- (b) crash with snapshots: re-decode only post-snapshot -------
+    kill_tick = 14
+    plan = FaultPlan([Fault(kill_tick, 0, "crash")])
+    router = FleetRouter([(eng(96), "rtx4090")],
+                         standby=[(eng(96), "rtx4090")],
+                         fault_plan=plan, snapshot_every=4)
+    crash_reqs = [Request(i, [3 + i] * 20, max_new=40) for i in range(2)]
+    for r in crash_reqs:
+        router.submit(r)
+    snap_lens = {}
+    while router.outstanding() and router.tick_count < 500:
+        if router.tick_count == kill_tick:
+            # the state the router's LAST snapshot actually recorded —
+            # everything decoded after this must be re-decoded, nothing
+            # decoded before it may be
+            snap_lens = {rid: len(toks)
+                         for rid, (_, toks) in router._snapshots.items()}
+        router.tick()
+    res = router.run(max_ticks=500)
+    assert router.stats["failures"] == 1
+    restores = router.stats["snapshot_restores"]
+    assert restores >= 1 and snap_lens
+    resumed = sum(r.engine.stats["resumed_tokens"] for r in router.replicas)
+    assert resumed == sum(snap_lens.values()), \
+        f"resumed {resumed} tokens != snapshot state {snap_lens}"
+    for r in res.completed:
+        assert len(r.generated) == 40
+
+    # --- (c) corrupt-faulted transfer: rejected, victim bitwise -------
+    plan = FaultPlan([Fault(0, 0, "corrupt", duration=300),
+                      Fault(2, 0, "straggle", factor=8.0, duration=10)])
+    router = FleetRouter([(eng(), "rtx4090"), (eng(), "rtx3080")],
+                         fault_plan=plan)
+    for r in reqs():
+        router.submit(r)
+    res = router.run(max_ticks=300)
+    rejects = sum(r.engine.stats["import_rejects"] for r in router.replicas)
+    assert router.stats["migrations"] == 0, \
+        "a corrupt-flipped payload must never import"
+    assert router.stats["migration_fallbacks"] >= 1 and rejects >= 1
+    assert sorted(r.req_id for r in res.completed) == list(range(n_req))
+    for r in res.completed:
+        assert list(r.generated) == ref_out[r.req_id], \
+            f"corrupt fallback changed greedy output of req {r.req_id}"
+
+    summary["migration"] = {
+        "requests": n_req,
+        "drain": {"migrations": drain_migr,
+                  "admissions": n_req, "retries": 0,
+                  "zero_reprefill": True},
+        "rebalance": {"rebalances": rebalances,
+                      "admissions": n_req, "retries": 0},
+        "crash_snapshot": {"snapshot_every": 4,
+                           "restores": restores,
+                           "resumed_tokens": resumed,
+                           "redecode_only_post_snapshot": True},
+        "corrupt": {"import_rejects": rejects,
+                    "fallbacks": router.stats["migration_fallbacks"],
+                    "bitwise_equal_victims": True},
+    }
+    if standalone:
+        with open(BENCH_JSON, "w") as f:
+            json.dump(summary, f, indent=1, default=float)
+    return [{"name": "migration/soft_drain_migrate",
+             "us_per_call": drain_s / max(1, drain_ticks) * 1e6,
+             "derived": f"migr{drain_migr}_admit{n_req}_retries0"},
+            {"name": "migration/crash_snapshot_resume",
+             "us_per_call": "",
+             "derived": f"resumed{resumed}tok_restores{restores}"},
+            {"name": "migration/corrupt_fallback",
+             "us_per_call": "",
+             "derived": f"rejects{rejects}_bitwise_ok"}]
 
 
 def scheduler_bench() -> List[dict]:

@@ -40,6 +40,7 @@ def main() -> None:
         ("fleet:only", micro.fleet_bench),
         ("prefix:only", micro.prefix_share_bench),
         ("chaos", micro.chaos_bench),     # degraded-mode fault tolerance
+        ("migration", micro.migration_bench),  # stateful failover
         ("scheduler", micro.scheduler_bench),
         ("compression", micro.compression_bench),
         ("pipeline", micro.pipeline_bench),

@@ -24,10 +24,12 @@ including failover requeues, whose drained requests carry their prefix
 digests so the router co-locates them with their shared pages.
 
 A final degraded-mode act injects a ``FaultPlan`` on a healthy fleet:
-the fast replica straggles (soft-drain moves its work), one rtx3080 is
-network-partitioned (its requests freeze and resume after heal with no
-re-prefill), and the run still completes every request "ok",
-bitwise-equal to the calm run.
+the fast replica straggles (soft-drain moves its work — by verified
+KV-page migration when a compatible peer has room, so moved requests
+keep their pages and generated tokens and pay no retry; requeue-from-
+prompt is the fallback), one rtx3080 is network-partitioned (its
+requests freeze and resume after heal with no re-prefill), and the run
+still completes every request "ok", bitwise-equal to the calm run.
 
     PYTHONPATH=src python examples/serve_fleet.py
 """
@@ -126,9 +128,11 @@ def main():
 
     # act 3 — degraded mode without any death: a FaultPlan straggles the
     # fast replica (its tick-latency EWMA crosses the drain threshold ->
-    # in-flight work soft-drains, digests preserved) and partitions one
-    # rtx3080 (its requests FREEZE in place and resume after heal with
-    # no re-dispatch and no re-prefill); every request still completes
+    # in-flight work soft-drains: verified KV-page migration to a peer
+    # with room, zero retries charged; requeue-from-prompt with digests
+    # preserved when no destination fits) and partitions one rtx3080
+    # (its requests FREEZE in place and resume after heal with no
+    # re-dispatch and no re-prefill); every request still completes
     # "ok", bitwise-equal to the calm run
     from repro.serve.faults import Fault, FaultPlan
     plan = FaultPlan()
@@ -144,11 +148,15 @@ def main():
     print(f"degraded run: outcomes " + ", ".join(
         f"{k}={v}" for k, v in sorted(res.outcomes().items())))
     print(f"  {st['straggles']} straggle ticks -> {st['soft_drains']} "
-          f"soft-drain ({st['requeued']} requests moved), "
+          f"soft-drain ({st['migrations']} migrated with pages+tokens, "
+          f"{st['requeued']} requeued from prompt), "
           f"{st['partitions']} partition -> {st['partition_heals']} "
           f"healed in place")
     assert res.ok, res.outcomes()
     assert st["soft_drains"] >= 1, "straggler never crossed drain EWMA"
+    # drained work went SOMEWHERE: live migration (state + pages move,
+    # no retry) or the digest-preserving requeue fallback
+    assert st["migrations"] + st["requeued"] >= 1, st
     assert st["partitions"] == 1 and st["partition_heals"] == 1
     assert {r.req_id: r.generated for r in res.completed} == ref
     print("straggler drained, partition healed, outputs bitwise-equal ✓")

@@ -32,10 +32,20 @@ backup pool and ``--heartbeat-every`` ticks between failure-detection
 rounds (``--reliability`` < 1 makes seeded mid-decode failures happen:
 in-flight requests re-prefill on the drafted replacement).
 ``--chaos-rate`` > 0 additionally injects a seeded ``FaultPlan`` (crash,
-straggle, partition, pool_pressure) over the first ``--chaos-ticks``
-ticks; requests carry a ``--max-retries`` budget and the run reports
-structured per-request outcomes instead of raising away partial results
-(``--strict`` restores the raise).
+straggle, partition, pool_pressure, corrupt) over the first
+``--chaos-ticks`` ticks; requests carry a ``--max-retries`` budget and
+the run reports structured per-request outcomes instead of raising away
+partial results (``--strict`` restores the raise).
+
+Stateful failover (fleet mode): ``--migration auto|always|never``
+controls whether soft-drain and rebalance victims move by verified
+KV-page migration (checksum-chained export/import, dedup against the
+destination's content registry) instead of re-prefilling — ``auto``
+decides per request with the bytes-over-bandwidth vs recompute cost
+model; ``--snapshot-every N`` records decode snapshots so crash victims
+resume from their last snapshot; ``--rebalance-every N`` adds the load
+trigger; ``--hold-pages N`` keeps refcount-zero registered pages LRU-
+held so imports and re-admissions dedup against them.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b \
         --requests 8 --max-new 16 --slots 4 --chunk 16 --page-size 16
@@ -133,6 +143,29 @@ def main():
                     help="fleet mode: raise on any failed request "
                          "instead of returning partial results with "
                          "structured outcomes")
+    ap.add_argument("--migration", choices=["auto", "always", "never"],
+                    default="auto",
+                    help="fleet mode: soft-drain/rebalance victims move "
+                         "via verified KV-page migration instead of "
+                         "re-prefilling; 'auto' runs the bytes-over-"
+                         "bandwidth vs recompute cost model, 'always' "
+                         "skips it, 'never' restores drain-and-requeue")
+    ap.add_argument("--snapshot-every", type=int, default=8,
+                    help="fleet mode: record (prefix digests, generated "
+                         "tokens) for every admitted request every N "
+                         "ticks so crash victims resume decoding instead "
+                         "of starting over (0 = off)")
+    ap.add_argument("--rebalance-every", type=int, default=0,
+                    help="fleet mode: every N ticks, migrate the newest "
+                         "request off a replica whose pending tokens "
+                         "exceed rebalance_factor x the least-loaded "
+                         "peer (0 = off)")
+    ap.add_argument("--hold-pages", type=int, default=0,
+                    help="per-engine LRU hold: keep up to N refcount-"
+                         "zero registered pages resident instead of "
+                         "scrubbing, so re-admissions and migration "
+                         "imports dedup against them (paged sharing "
+                         "mode only)")
     ap.add_argument("--no-warmup", action="store_true",
                     help="skip ahead-of-traffic compilation of the two "
                          "engine shapes")
@@ -148,7 +181,8 @@ def main():
                              paged=args.paged, page_size=args.page_size,
                              num_blocks=args.num_blocks or None,
                              use_kernel=args.kernel, seed=args.seed,
-                             share_prefix=args.prefix_share)
+                             share_prefix=args.prefix_share,
+                             hold_pages=args.hold_pages)
 
     if args.replicas > 1:
         serve_fleet(args, cfg, build_engine)
@@ -226,7 +260,9 @@ def serve_fleet(args, cfg, build_engine):
         [(build_engine(), node(i)) for i in range(args.replicas)],
         [(build_engine(), node(args.replicas + i))
          for i in range(args.standby)],
-        seed=args.seed, fault_plan=plan)
+        seed=args.seed, fault_plan=plan, migration=args.migration,
+        snapshot_every=args.snapshot_every,
+        rebalance_every=args.rebalance_every)
     if not args.no_warmup:
         t0 = time.time()
         for rep in router.replicas:
@@ -264,10 +300,24 @@ def serve_fleet(args, cfg, build_engine):
     degraded = {k: st[k] for k in ("soft_drains", "preempted", "straggles",
                                    "partitions", "partition_heals",
                                    "partition_escalations", "pool_pressure",
-                                   "injected_crashes") if st.get(k)}
+                                   "injected_crashes", "corrupt_faults")
+                if st.get(k)}
     if degraded:
         print("  degraded mode: " + ", ".join(
             f"{k}={v}" for k, v in sorted(degraded.items())))
+    failover = {k: st[k] for k in ("migrations", "migration_fallbacks",
+                                   "rebalances", "rebalance_holds",
+                                   "snapshot_restores") if st.get(k)}
+    reps = list(router.replicas) + list(router._standby.values())
+    deduped = sum(r.engine.stats.get("deduped_pages", 0) for r in reps)
+    resumed = sum(r.engine.stats.get("resumed_tokens", 0) for r in reps)
+    rejects = sum(r.engine.stats.get("import_rejects", 0) for r in reps)
+    if failover or deduped or resumed or rejects:
+        print("  stateful failover: " + ", ".join(
+            f"{k}={v}" for k, v in sorted(failover.items()))
+            + (f", deduped_pages={deduped}" if deduped else "")
+            + (f", resumed_tokens={resumed}" if resumed else "")
+            + (f", import_rejects={rejects}" if rejects else ""))
     for r in sorted(res.failed, key=lambda r: r.req_id)[:6]:
         tr = res.traces.get(r.req_id, {})
         print(f"  FAILED req{r.req_id}: outcome={r.outcome} "

@@ -15,6 +15,7 @@ decode tick are the same callable at two shapes).
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Callable, Dict, List, Optional, Tuple
@@ -240,6 +241,13 @@ class Request:
     retries: int = 0
     max_retries: int = 3
     outcome: Optional[str] = None
+    # snapshot restore (stateful failover): tokens this request had
+    # already decoded at the router's last periodic snapshot.  Stamped
+    # by the crash path before requeue; admission re-prefills prompt +
+    # resume as ONE extended prompt (chunked prefill is bitwise-equal to
+    # the decode that first produced that KV) and restores ``generated``
+    # from it, so only tokens decoded since the snapshot are re-decoded.
+    resume_tokens: Optional[List[int]] = None
 
 
 class BlockAllocator:
@@ -270,9 +278,19 @@ class BlockAllocator:
     chains through parent *block ids*, matching check values imply
     byte-identical token prefixes by induction.  Registrations hold no
     refcount of their own and are dropped when the block is physically
-    freed."""
+    freed.
 
-    def __init__(self, num_blocks: int):
+    **LRU hold** (``hold_limit`` > 0): up to that many refcount-zero
+    registered pages are HELD instead of freed — registration and
+    content intact — so a popular prefix readmitted after a brief idle
+    gap attaches its pages instead of re-prefilling.  Held pages count
+    as available capacity (``can_reserve``); a reservation that needs
+    them evicts the oldest first, and evicted pages land on
+    ``take_scrub()`` so the engine zeroes their stale content before
+    reuse.  ``hold_limit == 0`` (the default) keeps the exact
+    free-at-refcount-zero semantics."""
+
+    def __init__(self, num_blocks: int, hold_limit: int = 0):
         self.num_blocks = num_blocks
         self._free = list(range(num_blocks - 1, -1, -1))
         self.reserved = 0
@@ -281,6 +299,11 @@ class BlockAllocator:
         # decode-time extends stay infallible — pressure only
         # backpressures admission.  May transiently exceed n_free.
         self.withheld = 0
+        self.hold_limit = hold_limit
+        self._held: List[int] = []                 # LRU, oldest first
+        # held pages evicted back to the free list: content is stale,
+        # the engine drains this and scrubs them before any reuse
+        self._pending_scrub: List[int] = []
         self.refcount: Dict[int, int] = {}
         self._by_digest: Dict[int, int] = {}       # digest -> block
         self._entries: Dict[int, tuple] = {}       # block -> (digest, check)
@@ -289,15 +312,44 @@ class BlockAllocator:
     def n_free(self) -> int:
         return len(self._free)
 
+    @property
+    def n_held(self) -> int:
+        return len(self._held)
+
     def can_reserve(self, n: int) -> bool:
-        return self.n_free - self.reserved - self.withheld >= n
+        return self.n_free + self.n_held - self.reserved - self.withheld >= n
 
     def reserve(self, n: int) -> bool:
         """Set aside ``n`` future pages; False = backpressure."""
         if not self.can_reserve(n):
             return False
+        # reservations must be backed by truly-free pages (alloc_one
+        # pops the free list): evict exactly the held pages this one
+        # needs, oldest first
+        short = n - (self.n_free - self.reserved - self.withheld)
+        if short > 0:
+            self.evict_held(short)
         self.reserved += n
         return True
+
+    def evict_held(self, k: int) -> List[int]:
+        """Evict up to ``k`` oldest held pages back to the free list
+        (deregistered; queued on ``take_scrub`` — their content is stale
+        from the pool's point of view)."""
+        out: List[int] = []
+        for _ in range(max(0, min(k, len(self._held)))):
+            b = self._held.pop(0)
+            self.deregister(b)
+            self._free.append(b)
+            self._pending_scrub.append(b)
+            out.append(b)
+        return out
+
+    def take_scrub(self) -> List[int]:
+        """Blocks evicted from the hold since the last call — free-listed
+        but carrying stale content; the caller owns scrubbing them."""
+        out, self._pending_scrub = self._pending_scrub, []
+        return out
 
     def alloc_one(self) -> int:
         """Take one page against an existing reservation (refcount 1)."""
@@ -309,7 +361,13 @@ class BlockAllocator:
         return b
 
     def share(self, block: int) -> None:
-        """Another table row now references ``block``."""
+        """Another table row now references ``block``.  Reviving a HELD
+        page (refcount zero, kept resident by the LRU hold) takes it
+        back out of the hold at refcount 1 — the hold paying off."""
+        if not self.refcount.get(block, 0) and block in self._held:
+            self._held.remove(block)
+            self.refcount[block] = 1
+            return
         assert self.refcount.get(block, 0) > 0, \
             f"BlockAllocator: share of unheld block {block}"
         self.refcount[block] += 1
@@ -353,9 +411,17 @@ class BlockAllocator:
             assert rc > 0, f"BlockAllocator: double free of [{b}]"
             if rc == 1:
                 del self.refcount[b]
-                self.deregister(b)
-                self._free.append(b)
-                freed.append(b)
+                if self.hold_limit > 0 and self.is_registered(b):
+                    # LRU hold: keep the page resident — registration
+                    # and content intact — so a readmitted prefix can
+                    # attach it; NOT reported freed (must not be
+                    # scrubbed while held)
+                    self._held.append(b)
+                    self.evict_held(len(self._held) - self.hold_limit)
+                else:
+                    self.deregister(b)
+                    self._free.append(b)
+                    freed.append(b)
             else:
                 self.refcount[b] = rc - 1
         self.reserved -= unreserve
@@ -428,6 +494,104 @@ def make_clear_blocks(cfg: ModelConfig) -> Callable:
     return clear_blocks
 
 
+def _path_key(path) -> str:
+    """Stable string key of a cache pytree path ("prefix/3/k",
+    "stack/0/v", ...) — the host-side index of migration payloads."""
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+@dataclass
+class RequestState:
+    """A live request's complete decode state, serialized by
+    ``ServingEngine.export_state`` for verified migration to another
+    replica (``import_state``).
+
+    ``pool`` / ``slot_state`` map pytree-path keys to host numpy arrays:
+    each pool entry holds the request's pages for one paged cache leaf
+    (page rows ordered like ``cols`` / ``cols_swa``), each slot_state
+    entry one per-slot recurrent carry.  ``digests`` is the prompt's
+    chain-digest trail — the content address the importer dedups against
+    its own registry, so pages already resident at the destination never
+    cross the wire twice.  ``checksum`` chains crc32 over the tokens,
+    the position, and every payload array in deterministic order: the
+    importer recomputes the chain and rejects the WHOLE transfer on any
+    mismatch, so corrupted bytes are never attached to a pool."""
+    req: Request
+    position: int
+    fingerprint: tuple
+    cols: List[int]                    # attn table columns, export order
+    cols_swa: List[int]                # swa ring columns, export order
+    pool: Dict[str, np.ndarray]
+    slot_state: Dict[str, np.ndarray]
+    digests: List[int]
+    checksum: int
+    payload_bytes: int
+
+
+def state_checksum(state: "RequestState") -> int:
+    """Chained crc32 over a migration payload — tokens, position, then
+    every payload array in sorted-key order.  One flipped byte anywhere
+    breaks the chain, so import verification is all-or-nothing."""
+    req = state.req
+    c = zlib.crc32(np.asarray(req.prompt, np.int64).tobytes())
+    c = zlib.crc32(np.asarray(req.generated + [req.pending],
+                              np.int64).tobytes(), c)
+    c = zlib.crc32(np.int64(state.position).tobytes(), c)
+    for key in sorted(state.pool):
+        c = zlib.crc32(np.ascontiguousarray(state.pool[key]).tobytes(), c)
+    for key in sorted(state.slot_state):
+        c = zlib.crc32(np.ascontiguousarray(state.slot_state[key]).tobytes(),
+                       c)
+    return c
+
+
+def make_gather_blocks(cfg: ModelConfig) -> Callable:
+    """(caches, blocks, blocks_swa, s) -> payload pytree with the SAME
+    treedef as ``caches``: pool leaves become their pages at the given
+    fixed-width padded block ids (full-attention pools gather ``blocks``,
+    sliding-window pools ``blocks_swa``), per-slot leaves become slot
+    ``s``'s row — one jitted call lifts a request's entire cache state
+    (KV pages + recurrent carries) off the device.  Out-of-pool padding
+    ids clamp in-bounds; the engine slices the garbage rows away."""
+    def gather_blocks(caches, blocks, blocks_swa, s):
+        def take(path, leaf):
+            name = str(getattr(path[-1], "key", path[-1]))
+            top = str(getattr(path[0], "key", path[0]))
+            bdim = 1 if top == "stack" else 0
+            if name in POOL_LEAVES:
+                ids = blocks_swa if _pool_mixer(cfg, path) == SWA else blocks
+                return leaf[(slice(None),) * bdim + (ids,)]
+            if leaf.ndim <= bdim:
+                return leaf
+            return leaf[(slice(None),) * bdim + (s,)]
+        return jax.tree_util.tree_map_with_path(take, caches)
+    return gather_blocks
+
+
+def make_scatter_blocks(cfg: ModelConfig) -> Callable:
+    """Inverse of ``make_gather_blocks``: write a payload pytree back
+    into the pools at the given block ids and into slot ``s``'s per-slot
+    rows.  Scatter mode='drop' skips out-of-pool padding ids, which is
+    how deduplicated pages (already resident at the destination) keep
+    their payload rows from landing."""
+    def scatter_blocks(caches, payload, blocks, blocks_swa, s):
+        def put(path, leaf, pay):
+            name = str(getattr(path[-1], "key", path[-1]))
+            top = str(getattr(path[0], "key", path[0]))
+            bdim = 1 if top == "stack" else 0
+            if name in POOL_LEAVES:
+                ids = blocks_swa if _pool_mixer(cfg, path) == SWA else blocks
+                idx = (slice(None),) * bdim + (ids,)
+                return leaf.at[idx].set(pay.astype(leaf.dtype), mode="drop")
+            if leaf.ndim <= bdim:
+                return leaf
+            idx = (slice(None),) * bdim + (s,)
+            return leaf.at[idx].set(pay.astype(leaf.dtype))
+        return jax.tree_util.tree_map_with_path(put, caches, payload)
+    return scatter_blocks
+
+
 def _copy_block(caches, src, dst):
     """Copy-on-write: duplicate pool page ``src`` into ``dst`` across
     every paged cache leaf (keys, values, positions).  Used when a slot
@@ -491,7 +655,27 @@ class ServingEngine:
     bitwise-identical to the non-shared engine.  Pages physically free
     (and scrub) only at refcount zero.  See serve/README.md for the
     full page lifecycle; ``stats`` tracks ``shared_pages`` /
-    ``shared_tokens`` / ``cow_copies``.
+    ``shared_tokens`` / ``cow_copies``.  ``hold_pages`` > 0 (sharing
+    engines only) additionally keeps up to that many refcount-zero
+    registered pages resident in an LRU hold, so a popular prefix
+    readmitted after a brief idle gap still attaches its pages — held
+    pages are evicted first under ``pool_pressure`` and whenever a
+    reservation needs the capacity.
+
+    **Stateful failover** (paged engines): ``export_state(req)`` lifts a
+    live request's complete decode state — generated tokens, pool page
+    contents per cache kind, recurrent carries, the prompt's
+    chain-digest trail, and a chained crc32 over the whole payload —
+    and ``import_state`` attaches it mid-decode on another engine of the
+    same model: verification first (a corrupted payload is rejected
+    outright; wrong content never reaches a pool), then registry dedup
+    (resident prefix pages attach by reference instead of crossing the
+    wire), then one jitted scatter for the rest.  Greedy decode of a
+    migrated request is bitwise-identical to never having moved.
+    Crash recovery composes with it: a request carrying
+    ``resume_tokens`` (the router's periodic snapshot) re-prefills
+    prompt + resume as one extended prompt and resumes decode after the
+    snapshot point instead of regenerating from scratch.
 
     **Kernel mode** (``use_kernel=True``, paged engines only): the S=1
     decode tick dispatches attention to the fused Pallas paged-decode
@@ -527,7 +711,7 @@ class ServingEngine:
                  cache_len: int = 512, chunk: int = 32, paged: bool = False,
                  page_size: int = 16, num_blocks: Optional[int] = None,
                  use_kernel: bool = False, share_prefix: bool = True,
-                 seed: int = 0):
+                 hold_pages: int = 0, seed: int = 0):
         self.params = params
         self.cfg = cfg
         self.slots = slots
@@ -562,7 +746,12 @@ class ServingEngine:
             self.n_cols = max(1, -(-cache_len // page_size))
             self.num_blocks = (num_blocks if num_blocks is not None
                                else max(1, -(-slots * cache_len // page_size)))
-            self._alloc = BlockAllocator(self.num_blocks)
+            # the LRU hold only pays off where pages are content-
+            # addressed (sharing engines); elsewhere it would just
+            # delay scrubs
+            self._alloc = BlockAllocator(
+                self.num_blocks,
+                hold_limit=hold_pages if self._can_share else 0)
             self._ring_blocks = (swa_ring_blocks(cfg.sliding_window,
                                                  page_size, self.n_cols)
                                  if self._has_swa else 0)
@@ -599,6 +788,10 @@ class ServingEngine:
         self._reset_fn = jax.jit(partial(_clear_slot, skip_pools=paged), **d0)
         self._clear_blocks_fn = jax.jit(make_clear_blocks(cfg), **d0)
         self._copy_block_fn = jax.jit(_copy_block, **d0)
+        # gather must NOT donate: the caches stay live after an export
+        self._gather_blocks_fn = jax.jit(make_gather_blocks(cfg))
+        self._scatter_blocks_fn = jax.jit(make_scatter_blocks(cfg), **d0)
+        self._page_bytes_cache: Dict[str, int] = {}
         self._clear_seen_fn = jax.jit(
             lambda seen, s: seen.at[s].set(False), **d0)
         self._seen = jnp.zeros((slots, cfg.vocab_size), jnp.bool_)
@@ -611,7 +804,10 @@ class ServingEngine:
         self._slot_shared: List[set] = [set() for _ in range(slots)]
         self.stats = {"prefill_calls": 0, "decode_calls": 0, "admitted": 0,
                       "backpressure": 0, "shared_pages": 0,
-                      "shared_tokens": 0, "cow_copies": 0, "preempted": 0}
+                      "shared_tokens": 0, "cow_copies": 0, "preempted": 0,
+                      "exported": 0, "imported": 0, "import_rejects": 0,
+                      "imported_pages": 0, "deduped_pages": 0,
+                      "resumed_tokens": 0}
         self._seed = seed
         self._step_seq = 0
         self._admit_seq = 0
@@ -720,13 +916,18 @@ class ServingEngine:
             S -= min(shared, S - 1)
         return -(-S // self.chunk)
 
-    def _register_prefix(self, s: int, prompt: List[int]) -> None:
+    def _register_prefix(self, s: int, prompt: List[int],
+                         include_partial: bool = True) -> None:
         """Advertise slot ``s``'s freshly admitted prompt pages in the
         allocator's content registry: every FULL page under its chain
         digest, plus the trailing partial page (if any) so an
         exact-or-longer prompt can attach it and CoW on divergence.
         First registration wins; a collision (digest taken by different
-        content) simply leaves our private page unadvertised."""
+        content) simply leaves our private page unadvertised.
+        ``include_partial=False`` (migration import) skips the trailing
+        page: a migrated slot's last prompt page already carries decode
+        tokens past the prompt tail, so advertising it as exactly the
+        tail would lie about its content."""
         P = self.page_size
         S = len(prompt)
         prev_d, prev_b = 0, -1
@@ -737,7 +938,7 @@ class ServingEngine:
             self._alloc.register(d, (prev_b, page), b)
             canon = self._alloc.lookup(d, (prev_b, page))
             prev_d, prev_b = d, (canon if canon is not None else b)
-        if S % P:
+        if S % P and include_partial:
             tail = tuple(prompt[(S // P) * P:])
             d = self._digest((prev_d, tail, "partial"))
             self._alloc.register(d, (prev_b, tail, "partial"),
@@ -823,17 +1024,47 @@ class ServingEngine:
                     sblocks, unreserve=self._slot_reserved_swa[s])
                 self._slot_reserved_swa[s] = 0
             self._table_swa[s] = -1
-        if scrub or scrub_swa:
-            pad = np.full((self.n_cols,), self.num_blocks, np.int32)
-            pad[:len(scrub)] = scrub
-            wid = max(1, self._ring_blocks)
-            pad_swa = np.full((wid,), max(1, self.num_blocks_swa), np.int32)
-            pad_swa[:len(scrub_swa)] = scrub_swa
-            self.caches = self._clear_blocks_fn(self.caches,
-                                                jnp.asarray(pad),
-                                                jnp.asarray(pad_swa))
+        # pages the allocator evicted from its LRU hold (overflow) are
+        # free-listed with stale content: scrub them with this batch
+        self._scrub_blocks(scrub + self._alloc.take_scrub(), scrub_swa)
         self._table[s] = -1
         self._slot_shared[s].clear()
+
+    def _scrub_blocks(self, scrub: List[int],
+                      scrub_swa: List[int]) -> None:
+        """Zero recycled pool pages (keys 0, positions -1) through the
+        fixed-width jitted scrub, chunking longer lists so the jit still
+        compiles once per engine."""
+        wid = max(1, self._ring_blocks)
+        while scrub or scrub_swa:
+            part, scrub = scrub[:self.n_cols], scrub[self.n_cols:]
+            part_swa, scrub_swa = scrub_swa[:wid], scrub_swa[wid:]
+            pad = np.full((self.n_cols,), self.num_blocks, np.int32)
+            pad[:len(part)] = part
+            pad_swa = np.full((wid,), max(1, self.num_blocks_swa), np.int32)
+            pad_swa[:len(part_swa)] = part_swa
+            # numpy operands: jit converts once per call, nothing jnp
+            # dispatches host-side in this loop
+            self.caches = self._clear_blocks_fn(self.caches, pad, pad_swa)
+
+    def _drain_scrub(self) -> None:
+        """Scrub pages evicted from the allocator's LRU hold by a
+        reservation or pool pressure (free-listed, stale content)."""
+        if self.paged:
+            self._scrub_blocks(self._alloc.take_scrub(), [])
+
+    def _release_slot(self, s: int) -> None:
+        """The ONE place a slot is vacated — shared by the finish path,
+        ``drain_requests``, ``preempt_newest``, and ``export_state``:
+        clear the slot, free + scrub its pages, and restore the greedy
+        sampling defaults so an idle slot can't keep the
+        all-greedy/no-penalty fast paths (lax.cond) switched off."""
+        self.active[s] = None
+        self._free_slot_blocks(s)
+        self._temp[s] = 0.0
+        self._topp[s] = 1.0
+        self._topk[s] = 0
+        self._reppen[s] = 1.0
 
     def _table_arg(self):
         """The block-table step operand: one array for single-kind
@@ -849,6 +1080,14 @@ class ServingEngine:
     @property
     def n_active(self) -> int:
         return sum(1 for r in self.active if r is not None)
+
+    def admitted_requests(self) -> List[Request]:
+        """Requests currently holding a slot, in ADMISSION order (slot
+        index lies once slots recycle) — the order the router walks for
+        migration, snapshots, and rebalance victim choice."""
+        live = [s for s in range(self.slots) if self.active[s] is not None]
+        live.sort(key=lambda s: self._admitted_at[s])
+        return [self.active[s] for s in live]
 
     @property
     def pending_tokens(self) -> int:
@@ -880,8 +1119,8 @@ class ServingEngine:
             return 1 << 30
         queued = sum(self._blocks_for(len(r.prompt) + r.max_new)
                      for r in self.queue)
-        return (self._alloc.n_free - self._alloc.reserved
-                - self._alloc.withheld - queued)
+        return (self._alloc.n_free + self._alloc.n_held
+                - self._alloc.reserved - self._alloc.withheld - queued)
 
     @property
     def occupancy(self) -> dict:
@@ -913,6 +1152,229 @@ class ServingEngine:
         """Worst-case pool pages a request would reserve at admission."""
         return self._blocks_for(prompt_len + max_new)
 
+    # -- stateful failover: verified page migration ----------------------
+
+    def _kind_page_bytes(self, swa: bool) -> int:
+        total = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(self.caches)[0]:
+            name = str(getattr(path[-1], "key", path[-1]))
+            if name not in POOL_LEAVES:
+                continue
+            if (_pool_mixer(self.cfg, path) == SWA) != swa:
+                continue
+            top = str(getattr(path[0], "key", path[0]))
+            bdim = 1 if top == "stack" else 0
+            total += leaf.nbytes // leaf.shape[bdim]
+        return total
+
+    @property
+    def page_bytes(self) -> int:
+        """Bytes one full-attention pool page occupies across every
+        paged cache leaf — the unit of the router's migrate-vs-reprefill
+        byte estimate."""
+        if not self.paged or not self._has_attn:
+            return 0
+        if "attn" not in self._page_bytes_cache:
+            self._page_bytes_cache["attn"] = self._kind_page_bytes(False)
+        return self._page_bytes_cache["attn"]
+
+    @property
+    def page_bytes_swa(self) -> int:
+        """Bytes one sliding-window ring page occupies across leaves."""
+        if not self.paged or not self._has_swa:
+            return 0
+        if "swa" not in self._page_bytes_cache:
+            self._page_bytes_cache["swa"] = self._kind_page_bytes(True)
+        return self._page_bytes_cache["swa"]
+
+    def registry_digests(self) -> frozenset:
+        """Digests currently resident in the content registry (LRU-held
+        pages included) — the per-replica view the router gossips on
+        heartbeats, so placement affinity and migrate-dedup byte
+        estimates see pages registered AFTER placement decisions."""
+        if not self._can_share:
+            return frozenset()
+        return frozenset(self._alloc._by_digest)
+
+    def migration_fingerprint(self) -> tuple:
+        """Compatibility key for stateful migration.  Page payloads are
+        raw device floats, so source and destination must run the SAME
+        weights (object identity — fleet replicas share one param
+        pytree), the same architecture, and the same page geometry;
+        anything else falls back to re-prefill."""
+        return (id(self.params), self.cfg, self.paged, self.page_size,
+                self.cache_len)
+
+    def export_state(self, req: Request) -> Optional[RequestState]:
+        """Serialize a LIVE request's complete decode state for verified
+        migration: generated + pending tokens (they ride on the Request),
+        every pool page its slot maps (per cache kind), per-slot
+        recurrent carries, the prompt's chain-digest trail (the importer
+        dedups against its own content registry), and a chained crc32
+        over the whole payload.  The slot is released — after a
+        successful ``import_state`` elsewhere the request continues
+        mid-decode; if the import fails the caller falls back to
+        requeue-from-prompt (the state object holds everything needed
+        either way).  Returns None for dense engines or a request not
+        currently admitted here."""
+        if not self.paged:
+            return None
+        s = next((i for i in range(self.slots) if self.active[i] is req),
+                 None)
+        if s is None:
+            return None
+        cols = [c for c in range(self.n_cols) if self._table[s, c] >= 0]
+        blocks = [int(self._table[s, c]) for c in cols]
+        cols_swa, blocks_swa = [], []
+        if self._has_swa:
+            cols_swa = [c for c in range(self._ring_blocks)
+                        if self._table_swa[s, c] >= 0]
+            blocks_swa = [int(self._table_swa[s, c]) for c in cols_swa]
+        pad = np.full((self.n_cols,), self.num_blocks, np.int32)
+        pad[:len(blocks)] = blocks
+        wid = max(1, self._ring_blocks)
+        pad_swa = np.full((wid,), max(1, self.num_blocks_swa), np.int32)
+        pad_swa[:len(blocks_swa)] = blocks_swa
+        payload = self._gather_blocks_fn(self.caches, jnp.asarray(pad),
+                                         jnp.asarray(pad_swa),
+                                         jnp.asarray(s, jnp.int32))
+        pool: Dict[str, np.ndarray] = {}
+        slot_state: Dict[str, np.ndarray] = {}
+        for path, leaf in jax.tree_util.tree_flatten_with_path(payload)[0]:
+            key = _path_key(path)
+            name = str(getattr(path[-1], "key", path[-1]))
+            bdim = 1 if key.startswith("stack") else 0
+            arr = np.asarray(leaf)
+            if name in POOL_LEAVES:
+                k = (len(cols_swa)
+                     if _pool_mixer(self.cfg, path) == SWA else len(cols))
+                pool[key] = arr[(slice(None),) * bdim + (slice(0, k),)]
+            else:
+                slot_state[key] = arr
+        state = RequestState(
+            req=req, position=self.positions[s],
+            fingerprint=self.migration_fingerprint(),
+            cols=cols, cols_swa=cols_swa, pool=pool, slot_state=slot_state,
+            digests=self.prefix_digests(req.prompt), checksum=0,
+            payload_bytes=(sum(a.nbytes for a in pool.values())
+                           + sum(a.nbytes for a in slot_state.values())))
+        state.checksum = state_checksum(state)
+        req.prefix_digests = state.digests
+        self._release_slot(s)
+        self.stats["exported"] += 1
+        return state
+
+    def import_state(self, state: RequestState) -> bool:
+        """Attach a migrated request mid-decode.  Verification comes
+        FIRST: the payload's checksum chain is recomputed and any
+        mismatch rejects the whole transfer before a byte reaches the
+        pool — unverified content is never served.  Then the prompt's
+        full prefix pages are deduplicated against the local content
+        registry (resident pages attach by reference; their bitwise
+        equality follows from the chain-digest + check-value induction),
+        the rest land in freshly allocated pages via one jitted scatter,
+        and the slot's positions / sampling params / seen mask are
+        restored.  Returns False — engine state untouched — when no slot
+        or pages are free, the fingerprint mismatches, or verification
+        fails."""
+        req = state.req
+        if not self.paged \
+                or state.fingerprint != self.migration_fingerprint():
+            return False
+        s = next((i for i in range(self.slots) if self.active[i] is None),
+                 None)
+        if s is None:
+            return False
+        if state_checksum(state) != state.checksum:
+            self.stats["import_rejects"] += 1
+            return False
+        S = len(req.prompt)
+        hits: List[Tuple[int, int]] = []
+        if self._can_share:
+            _, hits, _ = self._match_prefix(req.prompt)
+        resident = {c: b for (c, b) in hits if c in set(state.cols)}
+        need = self._blocks_for(S + req.max_new) - len(resident)
+        if not self._alloc.reserve(need):
+            return False
+        self._slot_reserved[s] = need
+        need_swa = self._blocks_for_swa(S + req.max_new)
+        if need_swa:
+            ok = self._alloc_swa.reserve(need_swa)
+            assert ok   # exact-fit pool: slots * ring_blocks
+            self._slot_reserved_swa[s] = need_swa
+        self._drain_scrub()
+        self.caches = self._reset_fn(self.caches, s)
+        self._seen = self._clear_seen_fn(self._seen, s)
+        # map table columns: attach deduped pages by reference; fresh
+        # pages for the rest.  ``ids[j]`` pairs with payload row j —
+        # deduped columns keep the out-of-pool padding id so the
+        # scatter (mode='drop') skips their rows entirely.
+        ids = np.full((self.n_cols,), self.num_blocks, np.int32)
+        written = 0
+        for j, c in enumerate(state.cols):
+            if c in resident:
+                b = resident[c]
+                self._alloc.share(b)
+                self._table[s, c] = b
+                self._slot_shared[s].add(c)
+            else:
+                b = self._alloc.alloc_one()
+                self._slot_reserved[s] -= 1
+                self._table[s, c] = b
+                ids[j] = b
+                written += 1
+        wid = max(1, self._ring_blocks)
+        ids_swa = np.full((wid,), max(1, self.num_blocks_swa), np.int32)
+        for j, c in enumerate(state.cols_swa):
+            b = self._alloc_swa.alloc_one()
+            self._slot_reserved_swa[s] -= 1
+            self._table_swa[s, c] = b
+            ids_swa[j] = b
+
+        def build(path, leaf):
+            key = _path_key(path)
+            name = str(getattr(path[-1], "key", path[-1]))
+            top = str(getattr(path[0], "key", path[0]))
+            bdim = 1 if top == "stack" else 0
+            if name in POOL_LEAVES:
+                swa = _pool_mixer(self.cfg, path) == SWA
+                rows = wid if swa else self.n_cols
+                src = state.pool[key]
+                shape = list(leaf.shape)
+                shape[bdim] = rows
+                out = np.zeros(shape, src.dtype)
+                k = src.shape[bdim]
+                out[(slice(None),) * bdim + (slice(0, k),)] = src
+                return jnp.asarray(out)
+            if leaf.ndim <= bdim:
+                return leaf
+            return jnp.asarray(state.slot_state[key])
+
+        payload = jax.tree_util.tree_map_with_path(build, self.caches)
+        self.caches = self._scatter_blocks_fn(
+            self.caches, payload, jnp.asarray(ids), jnp.asarray(ids_swa),
+            jnp.asarray(s, jnp.int32))
+        self.active[s] = req
+        self._admit_seq += 1
+        self._admitted_at[s] = self._admit_seq
+        self.positions[s] = state.position
+        self._temp[s] = req.temperature
+        self._topp[s] = req.top_p
+        self._topk[s] = req.top_k
+        self._reppen[s] = req.rep_penalty
+        if req.rep_penalty != 1.0:
+            # the in-jit seen mask is maintained from step inputs, which
+            # this engine never saw: rebuild it from prompt + generated
+            row = np.zeros((self.cfg.vocab_size,), bool)
+            row[np.asarray(req.prompt + req.generated, np.int64)] = True
+            self._seen = self._seen.at[s].set(jnp.asarray(row))
+        if self._can_share:
+            self._register_prefix(s, req.prompt, include_partial=False)
+        self.stats["imported"] += 1
+        self.stats["imported_pages"] += written + len(state.cols_swa)
+        self.stats["deduped_pages"] += len(resident)
+        return True
+
     def drain_requests(self) -> List[Request]:
         """Harvest every live request in SUBMISSION order — admitted
         slots by admission sequence (slot index lies once slots have
@@ -932,12 +1394,7 @@ class ServingEngine:
                           key=lambda s: self._admitted_at[s])
         for s in admitted:
             req = self.active[s]
-            self.active[s] = None
-            self._free_slot_blocks(s)
-            self._temp[s] = 0.0
-            self._topp[s] = 1.0
-            self._topk[s] = 0
-            self._reppen[s] = 1.0
+            self._release_slot(s)
             out.append(req)
         out.extend(self.queue)
         self.queue = []
@@ -968,12 +1425,7 @@ class ServingEngine:
                 return None
             s = max(live, key=lambda s: self._admitted_at[s])
             req = self.active[s]
-            self.active[s] = None
-            self._free_slot_blocks(s)
-            self._temp[s] = 0.0
-            self._topp[s] = 1.0
-            self._topk[s] = 0
-            self._reppen[s] = 1.0
+            self._release_slot(s)
         req.generated = []
         req.pending = -1
         req.done = False
@@ -989,10 +1441,16 @@ class ServingEngine:
         queue, never crash in-flight work.  ``0`` restores the full
         pool.  No-op for dense engines and for models without
         full-attention paged pools (the SWA ring pool is exact-fit by
-        construction and must never be squeezed)."""
+        construction and must never be squeezed).  Pages idling in the
+        LRU hold are surrendered first — the hold is a cache, not a
+        commitment."""
         if not self.paged or not self._has_attn:
             return
-        self._alloc.withheld = max(0, int(pages))
+        pages = max(0, int(pages))
+        if pages:
+            self._alloc.evict_held(pages)
+            self._drain_scrub()
+        self._alloc.withheld = pages
 
     # -- request intake --------------------------------------------------
 
@@ -1082,9 +1540,19 @@ class ServingEngine:
         for s in range(self.slots):
             if self.active[s] is None and self.queue:
                 req = self.queue[0]
-                S = len(req.prompt)
+                # snapshot restore: prefill prompt + resume tokens as ONE
+                # extended prompt (chunked prefill writes KV bitwise-equal
+                # to the decode that first produced it), then restore
+                # ``generated`` below — only tokens decoded after the
+                # router's snapshot are re-decoded
+                resume = list(req.resume_tokens or ())
+                full = req.prompt + resume
+                S = len(full)
+                # total logical length stays prompt + max_new: resumed
+                # tokens count against the generation budget
+                total = S + req.max_new - len(resume)
                 shared_tok, hits, partial = (
-                    self._match_prefix(req.prompt) if self._can_share
+                    self._match_prefix(full) if self._can_share
                     else (0, [], None))
                 start = min(shared_tok, S - 1)
                 if self.paged:
@@ -1094,12 +1562,13 @@ class ServingEngine:
                     # a private page for its copy-on-write
                     untouched = sum(1 for (i, _) in hits
                                     if (i + 1) * self.page_size <= start)
-                    need = self._blocks_for(S + req.max_new) - untouched
+                    need = self._blocks_for(total) - untouched
                     if not self._alloc.reserve(need):
                         self.stats["backpressure"] += 1
                         break          # FIFO: later requests wait too
                     self._slot_reserved[s] = need
-                    need_swa = self._blocks_for_swa(S + req.max_new)
+                    self._drain_scrub()
+                    need_swa = self._blocks_for_swa(total)
                     if need_swa:
                         ok = self._alloc_swa.reserve(need_swa)
                         assert ok   # exact-fit pool: slots * ring_blocks
@@ -1126,7 +1595,7 @@ class ServingEngine:
                 self.stats["shared_pages"] += \
                     len(hits) + (1 if partial else 0)
                 self.stats["shared_tokens"] += start
-                prompt = np.asarray(req.prompt, np.int32)
+                prompt = np.asarray(full, np.int32)
                 nxt = None
                 for c0 in range(start, S, self.chunk):
                     piece = prompt[c0:c0 + self.chunk]
@@ -1139,9 +1608,16 @@ class ServingEngine:
                     nxt, self.caches = self._call_step(toks, pos)
                     self.stats["prefill_calls"] += 1
                 if self._can_share:
-                    self._register_prefix(s, req.prompt)
+                    self._register_prefix(s, full)
                 self.positions[s] = S
+                # the extended prompt's last logits ARE the decode logits
+                # at that position (chunked-prefill parity), so greedy
+                # resume continues exactly where the snapshot left off
                 req.pending = int(nxt[s, -1])
+                if resume:
+                    req.generated = resume
+                    req.resume_tokens = None
+                    self.stats["resumed_tokens"] += len(resume)
                 self.stats["admitted"] += 1
 
     def tick(self) -> int:
@@ -1168,14 +1644,7 @@ class ServingEngine:
             if len(req.generated) >= req.max_new:
                 req.done = True
                 self.finished.append(req)
-                self.active[s] = None
-                self._free_slot_blocks(s)
-                # back to greedy defaults so an idle slot can't keep the
-                # all-greedy/no-penalty fast paths (lax.cond) switched off
-                self._temp[s] = 0.0
-                self._topp[s] = 1.0
-                self._topk[s] = 0
-                self._reppen[s] = 1.0
+                self._release_slot(s)
         return len(act)
 
     def run(self, max_ticks: int = 10_000) -> List[Request]:

@@ -36,7 +36,17 @@ and applies each fault to the (live) target replica:
     ``pages`` paged-pool pages are withheld from NEW admissions for
     ``duration`` ticks (a co-tenant grabbed memory).  Reservation-backed
     decode of already-admitted requests is untouched — pressure can only
-    backpressure the queue, never crash an in-flight request.
+    backpressure the queue, never crash an in-flight request.  Engines
+    holding refcount-zero registered pages (the LRU prefix hold) give
+    those up first.
+
+``corrupt(duration)``
+    Every migration payload EXPORTED from the replica during the episode
+    arrives with flipped bytes (a flaky uplink / bad DIMM on the wire
+    path).  The importer's checksum-chain verification must reject the
+    transfer — wrong content is never served — and the router falls back
+    to requeue-from-prompt, exactly as if migration had never been
+    attempted.  A replica that exports nothing is unaffected.
 
 Plans are either hand-built (``FaultPlan([...])`` / ``plan.add``) for
 targeted tests or drawn from a seeded RNG (``FaultPlan.seeded``) for
@@ -49,7 +59,7 @@ from typing import Dict, Iterable, Iterator, List, Sequence, Tuple
 
 import numpy as np
 
-FAULT_KINDS = ("crash", "straggle", "partition", "pool_pressure")
+FAULT_KINDS = ("crash", "straggle", "partition", "pool_pressure", "corrupt")
 
 
 @dataclass(frozen=True)
@@ -57,8 +67,8 @@ class Fault:
     """One typed fault striking ``replica_id`` at fleet tick ``tick``.
 
     ``factor`` is the straggle tick-cost multiplier; ``duration`` the
-    episode length in fleet ticks (straggle / partition /
-    pool_pressure); ``pages`` the pool pages withheld (pool_pressure).
+    episode length in fleet ticks (straggle / partition / pool_pressure
+    / corrupt); ``pages`` the pool pages withheld (pool_pressure).
     Fields irrelevant to a kind are ignored."""
     tick: int
     replica_id: int
@@ -106,7 +116,9 @@ class FaultPlan:
         return self
 
     def at(self, tick: int) -> List[Fault]:
-        return self._by_tick.get(tick, [])
+        # a COPY: handing out the internal per-tick list would let a
+        # caller mutate the immutable-once-running schedule in place
+        return list(self._by_tick.get(tick, ()))
 
     def __len__(self) -> int:
         return self._n

@@ -52,6 +52,36 @@ requeue-from-prompt (crash, soft-drain, partition timeout) costs the
 victim one retry; a request exhausting ``max_retries`` stops consuming
 the fleet and fails terminally with outcome ``failed_retries``.
 
+**Stateful failover** (``migration`` / ``snapshot_every`` /
+``rebalance_every``): faults no longer have to cost re-prefill.  A
+soft-drained replica's admitted requests are MIGRATED mid-decode via
+``engine.export_state`` / ``import_state`` — page contents ship to the
+min-ECT compatible peer, the importer's chained-crc32 verification
+rejects any corrupted payload before a byte reaches its pool, and the
+destination deduplicates shared prefix pages against its content
+registry (only non-resident pages transfer; per-replica registry
+views are gossiped on heartbeat rounds, which also lets placement
+affinity see pages registered after earlier decisions).  Whether to
+migrate is a bytes-over-bandwidth decision: payload bytes over the
+source+destination ``LinkSpec`` versus re-prefilling prompt + decoded
+tokens at the destination's speed plus per-call dispatch overhead —
+``migration="auto"`` (default) migrates only when it is cheaper,
+``"always"`` skips the cost check, ``"never"`` restores the old
+requeue-from-prompt behavior everywhere.  ``rebalance_every`` > 0
+additionally migrates the newest-admitted request off the
+most-loaded replica whenever its pending-token backlog exceeds
+``rebalance_factor``x the least-loaded peer's.  Independently,
+``snapshot_every`` > 0 records each admitted request's
+``(prefix digests, generated tokens)`` every that-many ticks, so the
+CRASH path (where the replica's pages really are gone) restores
+tokens-so-far deterministically: the victim re-prefills prompt +
+snapshot tokens in one extended admission and re-decodes only what
+was generated after the last snapshot.  A migrated request pays no
+retry budget and keeps its decode progress; every fallback is the old
+requeue-from-prompt path, so nothing new can be dropped — and a
+``corrupt``-faulted transfer falls back there with the victim's final
+output bitwise-identical to a no-fault run.
+
 Fault tolerance reuses the broker verbatim: every replica's node is
 registered ``active``, every standby replica's node ``backup``.  A
 heartbeat round can kill a replica mid-decode (standbys are pinged by
@@ -85,11 +115,12 @@ from dataclasses import dataclass, field
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 import jax
+import numpy as np
 
 from repro.core.broker import Broker
 from repro.core.perfmodel import (DEVICE_CATALOG, LINK_REGIMES, CompNode,
                                   DeviceSpec, LinkSpec)
-from repro.serve.engine import Request, ServingEngine
+from repro.serve.engine import Request, RequestState, ServingEngine
 from repro.serve.faults import FaultPlan
 
 DeviceLike = Union[str, DeviceSpec, CompNode]
@@ -108,6 +139,21 @@ def sim_node(device: DeviceLike, *,
     spec = DEVICE_CATALOG[device] if isinstance(device, str) else device
     return CompNode(-1, spec, link or LINK_REGIMES["lan_10gbps"], lam=lam,
                     reliability=reliability)
+
+
+def _flip_payload(state: RequestState) -> None:
+    """Apply a ``corrupt`` fault to an in-flight migration payload: flip
+    one byte of the first non-empty pool page array (falling back to the
+    checksum field for page-free payloads).  The importer's chained-crc32
+    verification must reject the transfer — this helper exists so the
+    chaos suite can prove it does."""
+    for key in sorted(state.pool):
+        arr = np.ascontiguousarray(state.pool[key]).copy()
+        if arr.nbytes:
+            arr.view(np.uint8).reshape(-1)[0] ^= 0xFF
+            state.pool[key] = arr
+            return
+    state.checksum ^= 1
 
 
 def _flops_per_token(engine: ServingEngine) -> float:
@@ -141,6 +187,7 @@ class Replica:
     partition_start: int = -1  # fleet tick the partition began (-1 = none)
     partitioned_until: int = 0
     pressure_until: int = 0    # fleet tick pool_pressure lifts
+    corrupt_until: int = 0     # payloads exported before this tick flip
     soft_drained: bool = False  # already drained this degraded episode
 
 
@@ -198,15 +245,28 @@ class FleetRouter:
     request on its best replica.  ``partition_timeout``: ticks after
     which an unhealed partition escalates to a crash.
 
+    ``migration`` (``"auto"`` | ``"always"`` | ``"never"``): whether
+    soft-drain and rebalance ship verified decode state between
+    replicas instead of requeueing-from-prompt (``"auto"`` applies the
+    bytes-over-bandwidth cost check; ``dispatch_s`` is the per-call
+    overhead in its re-prefill estimate).  ``snapshot_every`` > 0
+    records each admitted request's (digests, generated) every
+    that-many ticks so crashes restore tokens-so-far.
+    ``rebalance_every`` > 0 checks every that-many ticks whether the
+    most-loaded replica's pending tokens exceed ``rebalance_factor``x
+    the least-loaded peer's and migrates its newest-admitted request.
+
     ``stats`` counts ``placed`` dispatches, ``completed`` requests,
     replica ``failures``, ``requeued`` in-flight requests, backup-pool
     ``replacements``, head-of-line ``held`` ticks, plus the degraded-mode
     counters: ``soft_drains`` / ``preempted`` / ``straggles`` /
     ``partitions`` / ``partition_heals`` / ``partition_escalations`` /
-    ``pool_pressure`` / ``injected_crashes`` / ``standby_deaths`` and
+    ``pool_pressure`` / ``injected_crashes`` / ``standby_deaths``, the
+    stateful-failover counters: ``migrations`` / ``migration_fallbacks``
+    / ``rebalances`` / ``snapshot_restores`` / ``corrupt_faults``, and
     the terminal failure outcomes.  ``placements`` records every
     req_id -> [replica_id, ...] dispatch history (len > 1 = re-queued
-    after a fault).
+    after a fault, or migrated mid-decode).
     """
 
     def __init__(self, replicas: Sequence[Tuple[ServingEngine, DeviceLike]],
@@ -215,9 +275,15 @@ class FleetRouter:
                  prefill_call_cost: float = 4.0, tie_eps: float = 0.02,
                  fault_plan: Optional[FaultPlan] = None,
                  drain_factor: float = 3.0, ewma_alpha: float = 0.5,
-                 hol_patience: int = 8, partition_timeout: int = 32):
+                 hol_patience: int = 8, partition_timeout: int = 32,
+                 migration: str = "auto", snapshot_every: int = 8,
+                 rebalance_every: int = 0, rebalance_factor: float = 4.0,
+                 dispatch_s: float = 1e-3):
         if not replicas:
             raise ValueError("FleetRouter: at least one replica required")
+        if migration not in ("auto", "always", "never"):
+            raise ValueError(f"FleetRouter: migration must be 'auto', "
+                             f"'always' or 'never', got {migration!r}")
         # admission-aware ECT: each outstanding jitted prefill call costs
         # this many token-equivalents of dispatch overhead on top of its
         # tokens, and each queued request one admission's worth of
@@ -230,6 +296,15 @@ class FleetRouter:
         self.ewma_alpha = ewma_alpha
         self.hol_patience = hol_patience
         self.partition_timeout = partition_timeout
+        # stateful failover: "auto" migrates when bytes-over-bandwidth
+        # beats re-prefill, "always" skips the cost check, "never"
+        # restores requeue-from-prompt everywhere.  dispatch_s is the
+        # per-jitted-call overhead in the re-prefill cost estimate.
+        self.migration = migration
+        self.snapshot_every = snapshot_every
+        self.rebalance_every = rebalance_every
+        self.rebalance_factor = rebalance_factor
+        self.dispatch_s = dispatch_s
         self.broker = Broker(seed=seed, heartbeat_s=heartbeat_s)
         self.replicas: List[Replica] = []
         self._standby: Dict[int, Replica] = {}      # node_id -> Replica
@@ -266,12 +341,20 @@ class FleetRouter:
         self._hol_req: Optional[int] = None         # held head req_id
         self._hol_held = 0                          # consecutive held ticks
         self._preempted_ids: set = set()            # ever-preempted req_ids
+        # stateful-failover state: periodic (digests, generated) records
+        # for the crash path, and the heartbeat-gossiped per-replica
+        # content-registry views for affinity + migrate-dedup estimates
+        self._snapshots: Dict[int, Tuple[tuple, List[int]]] = {}
+        self._registry_view: Dict[int, frozenset] = {}
         self.stats = {"placed": 0, "completed": 0, "failures": 0,
                       "requeued": 0, "replacements": 0, "held": 0,
                       "soft_drains": 0, "preempted": 0, "straggles": 0,
                       "partitions": 0, "partition_heals": 0,
                       "partition_escalations": 0, "pool_pressure": 0,
                       "injected_crashes": 0, "standby_deaths": 0,
+                      "migrations": 0, "migration_fallbacks": 0,
+                      "rebalances": 0, "rebalance_holds": 0,
+                      "snapshot_restores": 0, "corrupt_faults": 0,
                       "failed_retries": 0, "failed_unservable": 0,
                       "deadline_exceeded": 0}
 
@@ -334,13 +417,23 @@ class FleetRouter:
         the pages died with a failed replica — the longest common
         prefix-digest run with a request already queued on ``rep`` (the
         pages will be registered when that request admits, so
-        co-locating still converts to sharing).  Digest trails come from
-        ``drain_requests`` for failover requeues and are recomputed from
-        the prompt otherwise."""
+        co-locating still converts to sharing), or the leading-digest
+        run against the replica's last heartbeat-gossiped registry view
+        (pages registered AFTER earlier placement decisions).  Digest
+        trails come from ``drain_requests`` for failover requeues and
+        are recomputed from the prompt otherwise."""
         eng = rep.engine
         pages = eng.shared_prefix_pages(req.prompt)
         mine = (req.prefix_digests if req.prefix_digests is not None
                 else eng.prefix_digests(req.prompt))
+        view = self._registry_view.get(rep.replica_id)
+        if view:
+            run = 0
+            for d in mine:
+                if d not in view:
+                    break
+                run += 1
+            pages = max(pages, run)
         for other in eng.queue:
             theirs = (other.prefix_digests if other.prefix_digests is not None
                       else eng.prefix_digests(other.prompt))
@@ -475,6 +568,7 @@ class FleetRouter:
         req.outcome = outcome
         self.failed.append(req)
         self._finished_at[req.req_id] = self.tick_count
+        self._snapshots.pop(req.req_id, None)
         self.stats[outcome] += 1
 
     def _requeue(self, reqs: List[Request], *,
@@ -509,6 +603,7 @@ class FleetRouter:
             req.outcome = "ok"
             self.finished.append(req)
             self._finished_at[req.req_id] = self.tick_count
+            self._snapshots.pop(req.req_id, None)
             rep.served.append(req.req_id)
             self.stats["completed"] += 1
         rep._harvested = len(rep.engine.finished)
@@ -523,7 +618,21 @@ class FleetRouter:
         rep.partition_start = -1
         rep.straggle_factor, rep.straggle_until = 1.0, 0
         rep.busy_ticks = 0
-        self._requeue(rep.engine.drain_requests())
+        rep.corrupt_until = 0
+        self._registry_view.pop(rep.replica_id, None)
+        victims = rep.engine.drain_requests()
+        for req in victims:
+            # the pages died with the replica, but the router's periodic
+            # snapshot survives: restore tokens-so-far so the victim
+            # re-prefills prompt + snapshot in one extended admission and
+            # re-decodes only what came after the last snapshot
+            snap = self._snapshots.get(req.req_id)
+            if snap:
+                req.resume_tokens = list(snap[1])
+                if req.prefix_digests is None:
+                    req.prefix_digests = list(snap[0])
+                self.stats["snapshot_restores"] += 1
+        self._requeue(victims)
         self.stats["failures"] += 1
         sub = self.broker.draft_backup(node_id)
         if sub is not None:
@@ -538,7 +647,11 @@ class FleetRouter:
         A replica failure mid-decode kills it, requeues its in-flight
         requests from their prompts, and drafts a speed-matched standby;
         a standby failure just removes it from the draft pool (a dead
-        standby must never be drafted).  Returns dead node ids."""
+        standby must never be drafted).  Each surviving reachable
+        replica's content-registry digest set is gossiped fleet-wide,
+        piggybacked on the same round — placement affinity and the
+        migrate-dedup byte estimate read this (possibly stale) view, not
+        the live engines.  Returns dead node ids."""
         dead = self.broker.heartbeat_round()
         for nid in dead:
             if nid in self._standby:
@@ -546,6 +659,10 @@ class FleetRouter:
                 self.stats["standby_deaths"] += 1
             else:
                 self._on_death(nid)
+        for rep in self.replicas:
+            if self._reachable(rep):
+                self._registry_view[rep.replica_id] = \
+                    rep.engine.registry_digests()
         return dead
 
     def fail_replica(self, replica_id: int) -> None:
@@ -621,20 +738,200 @@ class FleetRouter:
                 rep.engine.set_pool_pressure(f.pages)
                 rep.pressure_until = max(rep.pressure_until, t + f.duration)
                 self.stats["pool_pressure"] += 1
+            elif f.kind == "corrupt":
+                # every migration payload EXPORTED from this replica
+                # during the episode arrives byte-flipped; the importer's
+                # checksum chain must reject it (see _evacuate)
+                rep.corrupt_until = max(rep.corrupt_until, t + f.duration)
+                self.stats["corrupt_faults"] += 1
 
     def _soft_drain(self, rep: Replica) -> None:
         """The replica's observed tick latency crossed ``drain_factor``:
-        requeue its in-flight work (digest-preserving, so victims
-        re-share prefixes on healthier replicas) instead of letting it
-        crawl.  Once per degraded episode — the flag rearms when the
-        EWMA recovers below the threshold."""
+        move its in-flight work to healthier replicas instead of letting
+        it crawl — migrating verified decode state where a compatible
+        destination exists (zero re-decoded tokens), requeueing
+        digest-preserving from the prompt otherwise.  Once per degraded
+        episode — the flag rearms when the EWMA recovers below the
+        threshold."""
         if rep.soft_drained:
             return
         rep.soft_drained = True
         self.stats["soft_drains"] += 1
-        victims = rep.engine.drain_requests()
+        self._evacuate(rep)
+
+    # -- stateful failover (verified KV migration + snapshots) -----------
+
+    def _migration_dest(self, src: Replica, req: Request,
+                        state: RequestState) -> Optional[Replica]:
+        """Pick where a migrating request should land: healthy peers
+        whose engine is migration-compatible (same weights object, same
+        architecture and page geometry — ``migration_fingerprint``),
+        with a free slot and enough free pages for the request's
+        worst-case reservation; min-ECT among them (replica id breaks
+        ties).  Under ``migration="auto"`` the winner must also beat
+        re-prefill on the bytes-over-bandwidth cost model, else None."""
+        cands = []
+        for r in self.live_replicas():
+            if r is src or not self._healthy(r):
+                continue
+            eng = r.engine
+            if (not eng.paged
+                    or eng.migration_fingerprint() != state.fingerprint
+                    or not eng.can_serve(req.prompt, req.max_new)
+                    or eng.n_active >= eng.slots
+                    or eng.free_pages < eng.blocks_needed(len(req.prompt),
+                                                          req.max_new)):
+                continue
+            cands.append(r)
+        if not cands:
+            return None
+        best = min(cands, key=lambda r: (self._ect(r, req), r.replica_id))
+        if (self.migration == "always"
+                or self._migrate_cheaper(src, best, req, state)):
+            return best
+        return None
+
+    def _migrate_cheaper(self, src: Replica, dst: Replica, req: Request,
+                         state: RequestState) -> bool:
+        """The migrate-vs-reprefill decision, in seconds.  Migrating
+        ships the payload bytes — minus full prefix pages the
+        destination's gossiped registry view says are already resident
+        (the importer dedups them, so they never cross the wire) — over
+        the source->destination path (latencies add, the slower link's
+        inverse bandwidth binds).  Re-prefilling re-runs prompt plus
+        every already-decoded token at the destination's analytic speed,
+        plus ``dispatch_s`` per jitted call (chunked-prefill calls and
+        one decode step per re-decoded token).  Ties migrate: equal wall
+        clock with no token recompute is strictly less wasted work."""
+        view = self._registry_view.get(dst.replica_id, frozenset())
+        resident = sum(1 for d in state.digests if d in view)
+        payload = state.payload_bytes - resident * src.engine.page_bytes
+        link = LinkSpec(alpha=src.node.link.alpha + dst.node.link.alpha,
+                        beta=max(src.node.link.beta, dst.node.link.beta))
+        migrate_s = link.time(max(0.0, float(payload)))
+        redecode = len(req.generated) + 1          # pending token rides too
+        tokens = len(req.prompt) + redecode
+        reprefill_s = (tokens * dst.flops_per_token / dst.node.speed
+                       + (dst.engine.prefill_calls_for(req.prompt) + redecode)
+                       * self.dispatch_s)
+        return migrate_s <= reprefill_s
+
+    def _reset_to_prompt(self, req: Request) -> None:
+        """A migration fell through after export: mirror what
+        ``drain_requests`` does to a victim so the requeue path sees the
+        usual re-prefill-from-prompt shape (export already stamped the
+        prefix-digest trail)."""
+        req.generated = []
+        req.pending = -1
+        req.done = False
+
+    def _evacuate(self, rep: Replica, *,
+                  count_retry: bool = True) -> None:
+        """Empty ``rep`` of in-flight work.  Each admitted request is
+        exported and imported mid-decode into the best compatible peer —
+        a migrated request keeps every decoded token and pays no retry.
+        Everything else (no destination, cost model says re-prefill,
+        verification rejected the payload, the engine queue) falls back
+        to the requeue-from-prompt path, so nothing is ever dropped.  A
+        ``corrupt``-faulted source flips a byte in every payload it
+        exports; the importer must reject those."""
+        fallbacks: List[Request] = []
+        if (self.migration != "never" and rep.engine.paged
+                and any(r is not rep and self._healthy(r)
+                        for r in self.live_replicas())):
+            for req in rep.engine.admitted_requests():
+                state = rep.engine.export_state(req)
+                if state is None:
+                    continue            # still queued: drain handles it
+                if self.tick_count < rep.corrupt_until:
+                    _flip_payload(state)
+                dst = self._migration_dest(rep, req, state)
+                if dst is not None and dst.engine.import_state(state):
+                    self._note_order(req)
+                    self._submitted_at.setdefault(req.req_id,
+                                                  self.tick_count)
+                    self.placements.setdefault(req.req_id, []).append(
+                        dst.replica_id)
+                    self.stats["migrations"] += 1
+                    continue
+                self.stats["migration_fallbacks"] += 1
+                self._reset_to_prompt(req)
+                fallbacks.append(req)
+        victims = rep.engine.drain_requests() + fallbacks
         if victims:
-            self._requeue(victims)
+            self._requeue(victims, count_retry=count_retry)
+
+    def _rebalance(self) -> None:
+        """Load-triggered migration: when the most-loaded healthy
+        replica's pending-token backlog exceeds ``rebalance_factor``x
+        the least-loaded peer's, its newest-admitted request (the one
+        with the most decode work still ahead) migrates off.  If the
+        cost model votes against moving — or the transfer is rejected —
+        the state is re-imported in place (a no-op rebalance, never a
+        lost token); only a doubly-failed import falls back to
+        requeue-from-prompt, paying no retry budget."""
+        live = [r for r in self.live_replicas()
+                if self._healthy(r) and r.engine.paged]
+        if len(live) < 2:
+            return
+        hi = max(live, key=lambda r: (r.engine.pending_tokens,
+                                      -r.replica_id))
+        lo = min(live, key=lambda r: (r.engine.pending_tokens,
+                                      r.replica_id))
+        if (hi is lo or hi.engine.n_active == 0
+                or hi.engine.pending_tokens
+                <= self.rebalance_factor * max(1, lo.engine.pending_tokens)):
+            return
+        req = hi.engine.admitted_requests()[-1]
+        fp = hi.engine.migration_fingerprint()
+        if not any(r is not hi
+                   and r.engine.migration_fingerprint() == fp
+                   and r.engine.n_active < r.engine.slots
+                   for r in live):
+            return                      # nowhere compatible: stay put
+        state = hi.engine.export_state(req)
+        if state is None:
+            return
+        if self.tick_count < hi.corrupt_until:
+            _flip_payload(state)
+        dst = self._migration_dest(hi, req, state)
+        if dst is not None:
+            if dst.engine.import_state(state):
+                self._note_order(req)
+                self._submitted_at.setdefault(req.req_id, self.tick_count)
+                self.placements.setdefault(req.req_id, []).append(
+                    dst.replica_id)
+                self.stats["migrations"] += 1
+                self.stats["rebalances"] += 1
+                return
+            # the destination rejected the payload (corrupt flip): the
+            # bytes are suspect, so don't re-import them locally either
+            self.stats["migration_fallbacks"] += 1
+            self._reset_to_prompt(req)
+            self._requeue([req], count_retry=False)
+            return
+        if hi.engine.import_state(state):
+            # moving lost the cost check: re-imported in place (counted
+            # separately so imported == migrations + rebalance_holds)
+            self.stats["rebalance_holds"] += 1
+            return
+        self.stats["migration_fallbacks"] += 1
+        self._reset_to_prompt(req)
+        self._requeue([req], count_retry=False)
+
+    def _snapshot_fleet(self) -> None:
+        """Record every reachable admitted request's (prefix digests,
+        generated tokens) — the crash path's restore point.  Snapshots
+        live at the ROUTER: they must survive the replica whose pages
+        they describe."""
+        for rep in self.replicas:
+            if not self._reachable(rep):
+                continue
+            for req in rep.engine.admitted_requests():
+                if req.generated:
+                    self._snapshots[req.req_id] = (
+                        tuple(rep.engine.prefix_digests(req.prompt)),
+                        list(req.generated))
 
     # -- the serving loop -------------------------------------------------
 
@@ -647,6 +944,10 @@ class FleetRouter:
         active slots across the fleet (in-flight work on partitioned or
         mid-tick replicas still counts — it is not lost)."""
         self._fault_tick()
+        if (self.rebalance_every and self.migration != "never"
+                and self.tick_count > 0
+                and self.tick_count % self.rebalance_every == 0):
+            self._rebalance()
         self._dispatch()
         n = 0
         for rep in self.replicas:
@@ -669,6 +970,9 @@ class FleetRouter:
                 self._soft_drain(rep)
             else:
                 rep.soft_drained = False
+        if (self.snapshot_every
+                and self.tick_count % self.snapshot_every == 0):
+            self._snapshot_fleet()
         self.tick_count += 1
         return n
 

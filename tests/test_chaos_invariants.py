@@ -1,14 +1,19 @@
 """Chaos property test: random seeded FaultPlans over a 3-replica fleet.
 
-For any fault schedule the degraded-mode router must uphold three
+For any fault schedule the degraded-mode router must uphold four
 invariants: (1) no request is ever dropped or duplicated — every
 submitted req_id shows up exactly once across completed + failed;
 (2) every request ends in a TERMINAL structured outcome (completed ones
 "ok", failed ones one of the failure outcomes, traces covering all);
 (3) whatever completes is bitwise-identical to a no-fault reference run
-— crashes, stragglers, partitions, pool pressure and preemption may move
-work around and re-prefill it, but they must never change what a
-finished request generated.
+— crashes, stragglers, partitions, pool pressure, preemption, state
+migration, snapshot-resume and ``corrupt``-flipped transfers may move
+work around, re-prefill or re-import it, but they must never change
+what a finished request generated; (4) unverified content is never
+served — every migration the routers count as successful was imported
+verified, and every checksum rejection fell back to
+requeue-from-prompt (seeded plans draw ``corrupt`` faults too, so
+flipped payloads actually occur).
 
 Runs under real ``hypothesis`` when installed (requirements-dev.txt);
 falls back to the deterministic ``tests/_hypothesis_shim.py`` on a bare
@@ -64,7 +69,8 @@ def _fleet(plan=None):
     return FleetRouter(
         [(_engine(), d) for d in ("rtx4090", "rtx3080", "rtx3080")],
         standby=[(_engine(), "rtx3080")],
-        fault_plan=plan, partition_timeout=8, hol_patience=4)
+        fault_plan=plan, partition_timeout=8, hol_patience=4,
+        snapshot_every=4, rebalance_every=6)
 
 
 def _reference():
@@ -104,7 +110,21 @@ def test_chaos_invariants(seed):
     for rid, tr in res.traces.items():
         assert tr["outcome"] is not None
     # (3) completed work is bitwise-identical to the no-fault run,
-    # wherever faults moved it and however often it re-prefilled
+    # wherever faults moved it and however often it re-prefilled,
+    # migrated mid-decode, or resumed from a router snapshot
     for r in res.completed:
         assert list(r.generated) == ref[r.req_id], \
             f"plan={plan!r}: req {r.req_id} diverged"
+    # (4) never serve unverified pages: successful migrations all passed
+    # the importer's checksum chain, and every rejection (corrupt flips
+    # included) became a requeue-from-prompt fallback, not an import
+    reps = router.replicas + list(router._standby.values())
+    rejects = sum(r.engine.stats["import_rejects"] for r in reps)
+    imports = sum(r.engine.stats["imported"] for r in reps)
+    assert imports == (router.stats["migrations"]
+                       + router.stats["rebalance_holds"]), \
+        f"plan={plan!r}: imports {imports} != " \
+        f"migrations {router.stats['migrations']} " \
+        f"+ holds {router.stats['rebalance_holds']}"
+    assert rejects <= router.stats["migration_fallbacks"], \
+        f"plan={plan!r}: rejects {rejects} exceed fallbacks"

@@ -1,0 +1,389 @@
+"""Stateful failover: verified KV page migration + decode-state snapshots.
+
+What must hold (and is pinned here):
+
+* ``export_state`` / ``import_state`` move a request mid-decode between
+  engines with BITWISE-identical greedy output to an uninterrupted run —
+  page contents, positions, sampling params and recurrent carries all
+  ride the payload, and the destination re-runs no prefill;
+* the chained-crc32 verification is all-or-nothing: one flipped byte
+  anywhere in the payload (or a lying checksum field) rejects the whole
+  transfer BEFORE anything lands in the destination pool, leaving the
+  destination engine exactly as it was;
+* import deduplicates full prompt-prefix pages already resident in the
+  destination's content registry — only non-resident pages transfer;
+* the router's migrate-vs-reprefill decision follows bytes over
+  bandwidth: fast links migrate, slow WAN links re-prefill;
+* crash recovery via router snapshots re-prefills prompt + snapshot
+  tokens in ONE extended admission and re-decodes only what came after
+  the last snapshot — still bitwise-equal for greedy decode;
+* the LRU hold keeps refcount-zero registered pages attachable across
+  idle gaps, revives them on re-share, and gives them up FIRST under
+  reservation demand and ``pool_pressure``;
+* ``FaultPlan.at`` hands out copies — the schedule cannot be mutated
+  through its own accessor.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.perfmodel import LINK_REGIMES
+from repro.models.transformer import init_params
+from repro.serve.engine import (BlockAllocator, Request, ServingEngine,
+                                generate)
+from repro.serve.faults import FAULT_KINDS, Fault, FaultPlan
+from repro.serve.router import FleetRouter, sim_node
+
+PROMPT = list(range(2, 40))
+MAX_NEW = 12
+_cache: dict = {}
+
+
+def _tiny():
+    if "params" not in _cache:
+        cfg = dataclasses.replace(get_smoke_config("gpt3-24l"),
+                                  vocab_size=128, d_model=128, d_ff=256,
+                                  n_heads=4, n_kv_heads=4, head_dim=32)
+        _cache["cfg"] = cfg
+        _cache["params"] = init_params(jax.random.PRNGKey(0), cfg)
+    return _cache["params"], _cache["cfg"]
+
+
+def _engine(slots=2, cache_len=64, **kw):
+    params, cfg = _tiny()
+    return ServingEngine(params, cfg, slots=slots, cache_len=cache_len,
+                         chunk=8, paged=True, page_size=16, **kw)
+
+
+def _ref(prompt=None, max_new=MAX_NEW):
+    prompt = PROMPT if prompt is None else prompt
+    key = (tuple(prompt), max_new)
+    if key not in _cache.setdefault("refs", {}):
+        params, cfg = _tiny()
+        _cache["refs"][key] = generate(
+            params, cfg, jnp.asarray([prompt], jnp.int32),
+            max_new=max_new)[0, len(prompt):].tolist()
+    return _cache["refs"][key]
+
+
+def _export_mid_decode(src, req, ticks=5):
+    src.submit(req)
+    for _ in range(ticks):
+        src.tick()
+    assert req.generated, "request must be mid-decode before export"
+    return src.export_state(req)
+
+
+def _flip_first_pool_byte(state):
+    for key in sorted(state.pool):
+        arr = np.ascontiguousarray(state.pool[key]).copy()
+        if arr.nbytes:
+            arr.view(np.uint8).reshape(-1)[0] ^= 0xFF
+            state.pool[key] = arr
+            return
+    raise AssertionError("no pool payload to corrupt")
+
+
+# ---------------------------------------------------------------------------
+# Satellite regressions: FaultPlan.at copy, corrupt fault validation
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_at_returns_copy():
+    plan = FaultPlan([Fault(3, 0, "crash"), Fault(3, 1, "straggle")])
+    got = plan.at(3)
+    assert [f.kind for f in got] == ["crash", "straggle"]
+    got.clear()                      # caller mangles its copy...
+    got.append("junk")
+    assert [f.kind for f in plan.at(3)] == ["crash", "straggle"]
+    assert len(plan) == 2            # ...the schedule is untouched
+
+
+def test_corrupt_fault_kind():
+    assert "corrupt" in FAULT_KINDS
+    f = Fault(0, 1, "corrupt", duration=3)
+    assert f.duration == 3
+    with pytest.raises(ValueError):
+        Fault(0, 1, "corrupt", duration=0)
+    # seeded plans can draw corrupt faults
+    plan = FaultPlan.seeded(7, ticks=200, replica_ids=[0, 1], rate=0.3)
+    assert any(f.kind == "corrupt" for f in plan)
+
+
+# ---------------------------------------------------------------------------
+# Allocator: LRU hold on refcount-zero registered pages
+# ---------------------------------------------------------------------------
+
+def test_lru_hold_keeps_and_revives_pages():
+    a = BlockAllocator(4, hold_limit=2)
+    assert a.reserve(2)
+    b0, b1 = a.alloc_one(), a.alloc_one()
+    assert a.register(101, (None, (1,)), b0)
+    assert a.register(102, (b0, (2,)), b1)
+    assert a.free([b0]) == []        # registered + hold: NOT scrubbed
+    assert a.free([b1]) == []
+    assert a.n_held == 2 and a.n_free + a.n_held == 4
+    # the held page is still attachable: share revives it to refcount 1
+    assert a.lookup(101, (None, (1,))) == b0
+    a.share(b0)
+    assert a.refcount[b0] == 1 and a.n_held == 1
+    assert a.free([b0]) == []        # back to held again
+    assert a.n_held == 2
+
+
+def test_lru_hold_evicts_oldest_under_demand():
+    a = BlockAllocator(4, hold_limit=4)
+    assert a.reserve(4)
+    blocks = [a.alloc_one() for _ in range(4)]
+    for i, b in enumerate(blocks):
+        assert a.register(200 + i, (None, (i,)), b)
+        assert a.free([b]) == []
+    assert a.n_held == 4
+    # a fresh reservation needs real free pages: oldest holds evicted
+    # first, deregistered, and queued for scrubbing
+    assert a.reserve(3)
+    assert a.n_held == 1
+    assert a.lookup(200, (None, (0,))) is None         # evicted
+    assert a.lookup(203, (None, (3,))) == blocks[3]    # newest kept
+    assert sorted(a.take_scrub()) == sorted(blocks[:3])
+    assert a.take_scrub() == []      # drained
+
+
+def test_pool_pressure_evicts_holds_first():
+    eng = _engine(hold_pages=8)
+    eng.submit(Request(0, list(PROMPT), max_new=2))
+    eng.run()
+    held = eng._alloc.n_held
+    assert held >= 2                 # finished request's pages held
+    eng.set_pool_pressure(held)
+    assert eng._alloc.n_held == 0    # holds gave way before the pool did
+    assert eng._alloc.withheld == held
+    eng.set_pool_pressure(0)
+    assert eng._alloc.n_free == eng.num_blocks
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: export/import round trip
+# ---------------------------------------------------------------------------
+
+def test_migration_round_trip_bitwise():
+    src, dst = _engine(), _engine()
+    req = Request(1, list(PROMPT), max_new=MAX_NEW)
+    state = _export_mid_decode(src, req)
+    assert state is not None and state.payload_bytes > 0
+    # the source slot is fully released — nothing leaks
+    assert src.n_active == 0
+    assert src._alloc.reserved == 0 and not src._alloc.refcount
+    assert dst.import_state(state)
+    out = dst.run()
+    assert len(out) == 1 and out[0] is req
+    assert req.generated == _ref()
+    # the destination re-ran NO prefill: the whole point of migrating
+    assert dst.stats["prefill_calls"] == 0
+    assert dst.stats["imported"] == 1
+    assert src.stats["exported"] == 1
+
+
+def test_migration_preserves_rep_penalty_state():
+    # greedy + repetition penalty is deterministic AND stateful: the
+    # per-slot seen-token mask must ride the migration for the
+    # destination's decode to match an uninterrupted run
+    src, dst = _engine(), _engine()
+    kw = dict(max_new=MAX_NEW, rep_penalty=1.3)
+    ref_eng = _engine()
+    ref_eng.submit(Request(0, list(PROMPT), **kw))
+    ref_out = ref_eng.run()[0].generated
+    req = Request(1, list(PROMPT), **kw)
+    state = _export_mid_decode(src, req)
+    assert dst.import_state(state)
+    assert dst.run()[0].generated == ref_out
+
+
+def test_import_rejects_flipped_byte():
+    src, dst = _engine(), _engine()
+    req = Request(2, list(PROMPT), max_new=MAX_NEW)
+    state = _export_mid_decode(src, req, ticks=4)
+    _flip_first_pool_byte(state)
+    assert not dst.import_state(state)
+    # rejection is clean: no slot taken, no pages reserved or written
+    assert dst.stats["import_rejects"] == 1
+    assert dst.n_active == 0
+    assert dst._alloc.reserved == 0
+    assert dst._alloc.n_free == dst.num_blocks
+
+
+def test_import_rejects_checksum_lie():
+    src, dst = _engine(), _engine()
+    req = Request(3, list(PROMPT), max_new=MAX_NEW)
+    state = _export_mid_decode(src, req, ticks=4)
+    state.checksum ^= 1
+    assert not dst.import_state(state)
+    assert dst.stats["import_rejects"] == 1
+
+
+def test_import_refuses_fingerprint_mismatch():
+    src = _engine()
+    other_geometry = _engine(cache_len=96)     # different page budget
+    req = Request(4, list(PROMPT), max_new=MAX_NEW)
+    state = _export_mid_decode(src, req, ticks=3)
+    assert not other_geometry.import_state(state)
+    # incompatibility is not a verification failure
+    assert other_geometry.stats["import_rejects"] == 0
+    assert other_geometry.n_active == 0
+
+
+def test_import_dedups_resident_prefix_pages():
+    src = _engine()
+    req = Request(5, list(PROMPT), max_new=MAX_NEW)
+    state = _export_mid_decode(src, req, ticks=3)
+    # destination already served (and LRU-holds) the same prompt
+    dst = _engine(hold_pages=8)
+    dst.submit(Request(6, list(PROMPT), max_new=2))
+    dst.run()
+    assert dst.import_state(state)
+    assert dst.stats["deduped_pages"] >= 2
+    assert dst.run()[-1].generated == _ref()
+
+
+def test_snapshot_resume_admission_bitwise():
+    ref_out = _ref()
+    eng = _engine()
+    req = Request(7, list(PROMPT), max_new=MAX_NEW,
+                  resume_tokens=ref_out[:5])
+    eng.submit(req)
+    out = eng.run()
+    assert out[0].generated == ref_out
+    assert eng.stats["resumed_tokens"] == 5
+
+
+# ---------------------------------------------------------------------------
+# Router: migration on soft-drain / rebalance, corrupt fallback, snapshots
+# ---------------------------------------------------------------------------
+
+def _straggle_fleet(plan, migration="auto", slots=4):
+    return FleetRouter([(_engine(slots=slots), "rtx4090"),
+                        (_engine(slots=slots), "rtx3080")],
+                       fault_plan=plan, migration=migration)
+
+
+def test_soft_drain_migrates_with_zero_retries():
+    plan = FaultPlan([Fault(2, 0, "straggle", factor=8.0, duration=10)])
+    router = _straggle_fleet(plan)
+    reqs = [Request(i, [3 + i] * 20, max_new=10) for i in range(3)]
+    for r in reqs:
+        router.submit(r)
+    res = router.run(max_ticks=300)
+    assert router.stats["soft_drains"] >= 1
+    assert router.stats["migrations"] >= 1
+    moved = [r for r in res.completed
+             if len(router.placements[r.req_id]) > 1]
+    assert moved
+    for r in moved:
+        assert r.retries == 0        # migration costs no retry budget
+    for r in res.completed:
+        assert r.generated == _ref(r.prompt, r.max_new)
+
+
+def test_migration_never_restores_requeue():
+    plan = FaultPlan([Fault(2, 0, "straggle", factor=8.0, duration=10)])
+    router = _straggle_fleet(plan, migration="never")
+    reqs = [Request(i, [3 + i] * 20, max_new=10) for i in range(3)]
+    for r in reqs:
+        router.submit(r)
+    res = router.run(max_ticks=300)
+    assert router.stats["migrations"] == 0
+    victims = [r for r in res.completed if r.retries > 0]
+    assert victims                   # old semantics: drain = requeue
+    for r in res.completed:
+        assert r.generated == _ref(r.prompt, r.max_new)
+
+
+def test_corrupt_transfer_rejected_victim_bitwise():
+    plan = FaultPlan([Fault(0, 0, "corrupt", duration=300),
+                      Fault(2, 0, "straggle", factor=8.0, duration=10)])
+    router = _straggle_fleet(plan)
+    reqs = [Request(i, [3 + i] * 20, max_new=10) for i in range(3)]
+    for r in reqs:
+        router.submit(r)
+    res = router.run(max_ticks=300)
+    assert router.stats["corrupt_faults"] == 1
+    assert router.stats["soft_drains"] >= 1
+    # every flipped payload was rejected by the checksum chain and fell
+    # back to requeue-from-prompt — no migration ever succeeded
+    assert router.stats["migrations"] == 0
+    assert router.stats["migration_fallbacks"] >= 1
+    rejects = sum(r.engine.stats["import_rejects"] for r in router.replicas)
+    assert rejects >= 1
+    assert sorted(r.req_id for r in res.completed) == [0, 1, 2]
+    for r in res.completed:
+        assert r.generated == _ref(r.prompt, r.max_new)
+
+
+def test_crash_snapshot_restores_decoded_tokens():
+    plan = FaultPlan([Fault(14, 0, "crash")])
+    router = FleetRouter([(_engine(slots=4, cache_len=96), "rtx4090")],
+                         standby=[(_engine(slots=4, cache_len=96),
+                                   "rtx4090")],
+                         fault_plan=plan, snapshot_every=4)
+    reqs = [Request(i, [3 + i] * 20, max_new=40) for i in range(2)]
+    for r in reqs:
+        router.submit(r)
+    res = router.run(max_ticks=500)
+    assert router.stats["failures"] == 1
+    assert router.stats["snapshot_restores"] >= 1
+    resumed = sum(r.engine.stats["resumed_tokens"] for r in router.replicas)
+    assert resumed >= 1              # tokens-so-far came back via snapshot
+    for r in res.completed:
+        assert r.generated == _ref(r.prompt, r.max_new)
+
+
+def test_rebalance_migrates_newest_off_loaded_replica():
+    e0, e1 = _engine(slots=4, cache_len=96), _engine(slots=4, cache_len=96)
+    router = FleetRouter([(e0, "rtx4090"), (e1, "rtx4090")],
+                         rebalance_every=2, rebalance_factor=1.5)
+    reqs = [Request(i, [3 + i] * 20, max_new=16) for i in range(3)]
+    for r in reqs:
+        e0.submit(r)                 # skew: all load on replica 0
+    res = router.run(max_ticks=400)
+    assert router.stats["rebalances"] >= 1
+    assert router.stats["migrations"] >= 1
+    for r in res.completed:
+        assert r.generated == _ref(r.prompt, r.max_new)
+
+
+def test_migrate_cost_decision_follows_link_speed():
+    plan = FaultPlan([Fault(2, 0, "straggle", factor=8.0, duration=10)])
+    reqs = lambda: [Request(i, [3 + i] * 20, max_new=10) for i in range(3)]
+
+    # LAN: payload bytes are cheap -> migrate
+    lan = FleetRouter(
+        [(_engine(slots=4), sim_node("rtx4090",
+                                     link=LINK_REGIMES["lan_10gbps"])),
+         (_engine(slots=4), sim_node("rtx3080",
+                                     link=LINK_REGIMES["lan_10gbps"]))],
+        fault_plan=plan)
+    for r in reqs():
+        lan.submit(r)
+    lan_res = lan.run(max_ticks=300)
+    assert lan.stats["migrations"] >= 1
+
+    # 10 Mbps WAN: shipping pages loses to re-prefilling -> fall back
+    plan = FaultPlan([Fault(2, 0, "straggle", factor=8.0, duration=10)])
+    wan = FleetRouter(
+        [(_engine(slots=4), sim_node("rtx4090",
+                                     link=LINK_REGIMES["wan_10mbps"])),
+         (_engine(slots=4), sim_node("rtx3080",
+                                     link=LINK_REGIMES["wan_10mbps"]))],
+        fault_plan=plan)
+    for r in reqs():
+        wan.submit(r)
+    wan_res = wan.run(max_ticks=300)
+    assert wan.stats["migrations"] == 0
+    # either way nothing is lost and survivors stay bitwise-equal
+    for res in (lan_res, wan_res):
+        assert sorted(r.req_id for r in res.completed) == [0, 1, 2]
+        for r in res.completed:
+            assert r.generated == _ref(r.prompt, r.max_new)
